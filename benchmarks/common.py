@@ -1,0 +1,26 @@
+"""Shared benchmark helpers: timing + the ``name,us_per_call,derived`` CSV
+contract of ``benchmarks.run``."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(name: str, fn: Callable, *, repeats: int = 1, derived_fn=None):
+    """Run ``fn`` ``repeats`` times; record mean wall time + derived info."""
+    outs = []
+    t0 = time.time()
+    for _ in range(repeats):
+        outs.append(fn())
+    dt = (time.time() - t0) / repeats
+    derived = derived_fn(outs[-1]) if derived_fn else ""
+    record(name, dt * 1e6, derived)
+    return outs[-1]

@@ -1,0 +1,90 @@
+"""Paper §5.3 / Figs. 5-8: offline scheduling energy across task-set
+utilization, server width l, four algorithms, ±DVFS.
+
+Defaults are CI-sized (3 groups per point, U_J up to 0.8); ``--full``
+reproduces the paper's axes (100 groups, U_J up to 1.6) given the time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import cluster as cl
+from repro.core import scheduling, tasks
+
+ALGOS = ("edl", "edf-bf", "edf-wf", "lpt-ff")
+
+
+def run(groups: int = 3, utils=(0.2, 0.4, 0.8), ls=(1, 4, 16),
+        theta: float = 1.0, verbose: bool = True) -> Dict:
+    lib = tasks.app_library()
+    out: Dict[str, Dict] = {}
+    for u in utils:
+        for seed in range(groups):
+            ts = tasks.generate_offline(u, seed=seed, library=lib)
+            base = cl.baseline_energy(ts)
+            for l in ls:
+                for alg in ALGOS:
+                    for use_dvfs in (False, True):
+                        r = scheduling.schedule_offline(
+                            ts, l=l, theta=theta, algorithm=alg,
+                            use_dvfs=use_dvfs)
+                        key = f"U{u}/l{l}/{alg}{'+dvfs' if use_dvfs else ''}"
+                        d = out.setdefault(key, {
+                            "e_total": [], "saving": [], "pairs": [],
+                            "violations": 0})
+                        d["e_total"].append(r.e_total)
+                        d["saving"].append(1 - r.e_total / base)
+                        d["pairs"].append(r.n_pairs)
+                        d["violations"] += r.violations
+
+    summary = {}
+    for key, d in sorted(out.items()):
+        summary[key] = {
+            "e_total_mean": float(np.mean(d["e_total"])),
+            "saving_mean": float(np.mean(d["saving"])),
+            "pairs_mean": float(np.mean(d["pairs"])),
+            "violations": d["violations"],
+        }
+        if verbose:
+            s = summary[key]
+            print(f"{key:30s} saving={s['saving_mean']:+.3f} "
+                  f"pairs={s['pairs_mean']:7.1f} viol={s['violations']}")
+
+    # headline rows (paper: ~33.5% at l=1 with DVFS)
+    edl_l1 = [v["saving_mean"] for k, v in summary.items()
+              if "/l1/edl+dvfs" in k]
+    record("offline/edl_dvfs_l1_saving", 0.0,
+           f"{float(np.mean(edl_l1)):.4f} (paper ~0.335)")
+    # baseline energies algorithm-independent (paper Fig. 5a overlap):
+    # compare the four algorithms at the SAME utilization.
+    spreads = []
+    for u in utils:
+        base_e = [v["e_total_mean"] for k, v in summary.items()
+                  if k.startswith(f"U{u}/l1/") and "+dvfs" not in k]
+        if base_e:
+            spreads.append(np.std(base_e) / np.mean(base_e))
+    record("offline/baseline_overlap", 0.0,
+           f"rel_spread={max(spreads):.2e}")
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--theta", type=float, default=1.0)
+    args = ap.parse_args(argv)
+    if args.full:
+        run(groups=100, utils=(0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4, 1.6),
+            ls=(1, 2, 4, 8, 16), theta=args.theta)
+    else:
+        run(theta=args.theta)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Paper §5.4 / Figs. 10-11: online energy decomposition, EDL vs
+bin-packing, ±DVFS, across server widths.
+
+CI default shrinks the day (horizon 400 slots, U_on 0.4); ``--full`` uses
+the paper's 1440-slot day with U_off=0.4 / U_on=1.6.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import online, tasks
+
+
+def run(groups: int = 2, u_off: float = 0.1, u_on: float = 0.4,
+        horizon: int = 400, ls=(1, 4, 16), theta: float = 0.9,
+        verbose: bool = True) -> Dict:
+    lib = tasks.app_library()
+    out: Dict[str, Dict] = {}
+    for seed in range(groups):
+        ts = tasks.generate_online(u_off, u_on, seed=seed, library=lib,
+                                   horizon=horizon)
+        for l in ls:
+            for alg in ("edl", "bin"):
+                for use_dvfs in (False, True):
+                    th = theta if use_dvfs else 1.0
+                    r = online.schedule_online(ts, l=l, theta=th,
+                                               algorithm=alg,
+                                               use_dvfs=use_dvfs)
+                    key = f"l{l}/{alg}{'+dvfs' if use_dvfs else ''}"
+                    d = out.setdefault(key, {"run": [], "idle": [],
+                                             "ovh": [], "viol": 0})
+                    d["run"].append(r.e_run)
+                    d["idle"].append(r.e_idle)
+                    d["ovh"].append(r.e_overhead)
+                    d["viol"] += r.violations
+
+    summary = {}
+    for key, d in sorted(out.items()):
+        summary[key] = {
+            "e_run": float(np.mean(d["run"])),
+            "e_idle": float(np.mean(d["idle"])),
+            "e_overhead": float(np.mean(d["ovh"])),
+            "violations": d["viol"],
+        }
+        if verbose:
+            s = summary[key]
+            tot = s["e_run"] + s["e_idle"] + s["e_overhead"]
+            print(f"{key:16s} run={s['e_run']:.3e} idle={s['e_idle']:.3e} "
+                  f"ovh={s['e_overhead']:.3e} total={tot:.3e} "
+                  f"viol={s['violations']}")
+
+    # paper §5.4.2: runtime energy saving ~34.7%, l-independent
+    for l in ls:
+        run_d = summary[f"l{l}/edl+dvfs"]["e_run"]
+        run_n = summary[f"l{l}/edl"]["e_run"]
+        record(f"online/run_saving_l{l}", 0.0,
+               f"{1 - run_d / run_n:.4f} (paper ~0.347)")
+    # bin-packing controls turn-on overhead better (paper Fig. 11)
+    record("online/overhead_bin_vs_edl_l16", 0.0,
+           f"{summary['l16/bin+dvfs']['e_overhead']:.3e} vs "
+           f"{summary['l16/edl+dvfs']['e_overhead']:.3e}")
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    if args.full:
+        run(groups=10, u_off=0.4, u_on=1.6, horizon=1440,
+            ls=(1, 2, 4, 8, 16))
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

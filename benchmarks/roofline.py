@@ -1,0 +1,236 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+cell from the dry-run JSONs.
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = collective_bytes / (chips x 50 GB/s/link)
+
+``cost_analysis()``/HLO shapes on the partitioned module are per-device, so
+the per-chip seconds drop out directly (chips cancel).  FLOPs/bytes use the
+loop-body-corrected totals (see launch/dryrun.py — XLA counts scan bodies
+once); the collective term uses the ring-model wire bytes per device.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per step; the ratio
+MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is "useful"
+(remat recompute makes it < 1 by design: fwd+remat+bwd ~ 4/3 overhead on
+top of the 6ND convention's fwd+bwd).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.roofline --dir results/dryrun \
+        [--mesh single] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import record
+from repro.configs import registry
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def hbm_traffic(arch: str, shape: str, mesh: str, microbatches: int) -> float:
+    """Analytic per-chip HBM traffic (bytes/step) for the memory term.
+
+    XLA *CPU* ``bytes accessed`` counts every op's operands at CPU fusion
+    granularity — ~10^3x the HBM traffic a TPU pass would see (verified:
+    qwen2 train_4k reports 8e13 B/chip where weights+stash+optimizer round
+    to ~4e10).  The memory roofline term therefore uses this explicit
+    traffic model; the XLA number is kept as a diagnostic upper bound.
+
+    Model (per chip): weight reads (bf16) x3 per microbatch for
+    fwd/remat/bwd, f32 grad-accum read+write per microbatch, 7x f32
+    optimizer traffic, remat stash write+read, K_ACT=6 residual-stream
+    flows per layer per microbatch, chunked-CE logits write+read, and for
+    decode the KV-cache/state read + weight read."""
+    K_ACT = 6
+    cfg = registry.get_config(arch)
+    spec = registry.SHAPES[shape]
+    chips = chips_of(mesh)
+    dp = 32 if mesh == "multi" else 16
+    ms = 16  # model shards
+    p_local = cfg.param_count() / chips
+    d = cfg.d_model
+    v_local = cfg.padded_vocab / ms
+    if spec.mode == "train":
+        m = microbatches
+        rows = max(1, spec.global_batch // m // dp)
+        act = rows * spec.seq_len * d * 2
+        t = (3 * m * p_local * 2                  # weights (bf16 cast reads)
+             + 2 * m * p_local * 4                # grad accumulate r+w
+             + 7 * p_local * 4                    # adam p/m/v read+write
+             + 2 * cfg.n_layers * act * m         # stash write+read
+             + K_ACT * cfg.n_layers * act * m     # residual-stream flows
+             + 2 * m * rows * spec.seq_len * v_local * 4)   # CE logits
+        return t
+    if spec.mode == "prefill":
+        rows = max(1, spec.global_batch // dp)
+        act = rows * spec.seq_len * d * 2
+        cache = (cfg.n_layers * rows * (spec.seq_len / ms)
+                 * cfg.n_kv_heads * cfg.head_dim_ * 2 * 2)
+        return (p_local * 2 + K_ACT * cfg.n_layers * act + cache
+                + rows * v_local * 4)
+    # decode
+    rows = max(1, spec.global_batch // dp)
+    if cfg.family == "ssm":
+        cache = cfg.n_layers * rows * (
+            cfg.n_ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4 * 2
+            + (cfg.conv_width - 1) * (cfg.d_inner + 2 * cfg.ssm_state) * 2)
+    elif cfg.family == "hybrid":
+        w = min(spec.seq_len, cfg.local_window)
+        n_attn = cfg.n_layers // 3
+        cache = (n_attn * rows * (w / ms) * cfg.n_kv_heads
+                 * cfg.head_dim_ * 2 * 2
+                 + (cfg.n_layers - n_attn) * rows * cfg.rnn_width_ * 4 * 2)
+    else:
+        w = min(spec.seq_len, cfg.sliding_window or spec.seq_len)
+        cache = (cfg.n_layers * rows * (w / ms) * cfg.n_kv_heads
+                 * cfg.head_dim_ * 2 * 2)
+    active_params = cfg.param_count(active_only=True) / chips
+    return active_params * 2 + cache + rows * v_local * 4
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = registry.get_config(arch)
+    spec = registry.SHAPES[shape]
+    n_active = cfg.param_count(active_only=True)
+    if spec.mode == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n_active * tokens
+    if spec.mode == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * spec.global_batch  # decode: one token per row
+
+
+def chips_of(mesh: str) -> int:
+    return 512 if mesh == "multi" else 256
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    corr = rec.get("corrected")
+    full = rec["full"]
+    # The probe correction can go slightly negative when XLA dedups
+    # collectives differently between the 1-unit and 2-unit probes
+    # (CSE noise); clamp at the uncorrected full-program floor.
+    flops = max(corr["flops"], full["cost"]["flops"]) if corr \
+        else full["cost"]["flops"]
+    xla_bytes = (max(corr["bytes_accessed"], 0.0) if corr
+                 else full["cost"]["bytes_accessed"])
+    hbytes = hbm_traffic(rec["arch"], rec["shape"], rec["mesh"],
+                         rec.get("microbatches", 1))
+    cbytes = (max(corr["collective_wire_bytes"],
+                  full["collectives"]["ring_wire_bytes"]) if corr
+              else full["collectives"]["ring_wire_bytes"])
+    t_c = flops / PEAK_FLOPS
+    t_m = hbytes / HBM_BW
+    t_x = cbytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    step = max(t_c, t_m, t_x)
+    mf = model_flops(rec["arch"], rec["shape"]) / chips_of(rec["mesh"])
+    useful = mf / max(flops, 1e-30)
+    # roofline fraction: useful work rate vs the peak the dominant
+    # resource allows
+    frac = (mf / PEAK_FLOPS) / max(step, 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "mode": rec["mode"], "tag": rec.get("tag", "baseline"),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "bottleneck": dom, "step_s": step,
+        "model_flops_per_chip": mf, "hlo_flops": flops,
+        "xla_bytes_diag": xla_bytes,
+        "useful_ratio": useful, "roofline_frac": frac,
+        "mem_live_gib": full["memory"]["live_bytes"] / 2**30,
+        "napkin_gib": rec.get("hbm_napkin", {}).get("total", 0) / 2**30,
+        "microbatches": rec.get("microbatches", 1),
+    }
+
+
+def load(dir_: str, mesh: Optional[str] = None,
+         tag: str = "baseline") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        rec = json.load(open(path))
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if tag and rec.get("tag", "baseline") != tag:
+            continue
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(rows: List[Dict], markdown: bool = False) -> str:
+    hdr = ["arch", "shape", "mesh", "compute", "memory", "collective",
+           "bottleneck", "MF/HLO", "roofline%", "mem GiB", "mb"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(",".join(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        cells = [r["arch"], r["shape"], r["mesh"], fmt_s(r["compute_s"]),
+                 fmt_s(r["memory_s"]), fmt_s(r["collective_s"]),
+                 r["bottleneck"], f"{r['useful_ratio']:.2f}",
+                 f"{100*r['roofline_frac']:.1f}",
+                 f"{r['mem_live_gib']:.1f}", str(r["microbatches"])]
+        if markdown:
+            lines.append("| " + " | ".join(cells) + " |")
+        else:
+            lines.append(",".join(cells))
+    return "\n".join(lines)
+
+
+def run(dir_: str = "results/dryrun", mesh: Optional[str] = "single",
+        markdown: bool = False, tag: str = "baseline",
+        verbose: bool = True) -> List[Dict]:
+    rows = load(dir_, mesh, tag)
+    if verbose:
+        print(table(rows, markdown))
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        record("roofline/cells_analyzed", 0.0, str(len(rows)))
+        record("roofline/worst_cell", 0.0,
+               f"{worst['arch']}/{worst['shape']} "
+               f"frac={worst['roofline_frac']:.3f}")
+        for b in ("compute", "memory", "collective"):
+            n = sum(1 for r in rows if r["bottleneck"] == b)
+            record(f"roofline/bottleneck_{b}", 0.0, str(n))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "all"])
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    run(args.dir, None if args.mesh == "all" else args.mesh,
+        args.markdown, args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""The paper's low-overhead claim (§2.1): Algorithm 1's per-task solve must
+be cheap enough for instantaneous online decisions.  Measures tasks/second
+for the production jnp solver and the Pallas kernel path, plus end-to-end
+slots/second of the online simulator."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import online, single_task, tasks
+
+
+def run(n_tasks: int = 4096, verbose: bool = True) -> dict:
+    lib = tasks.app_library()
+    ts = tasks.generate_offline(n_tasks / 2048.0, seed=0, library=lib)
+    allowed = ts.deadline - ts.arrival
+
+    # warmup compiles
+    single_task.configure_tasks(ts.params, allowed)
+    t0 = time.time()
+    single_task.configure_tasks(ts.params, allowed)
+    dt_jnp = time.time() - t0
+    record("phi/jnp_solver", dt_jnp / len(ts) * 1e6,
+           f"{len(ts)/dt_jnp:.0f} tasks/s")
+
+    single_task.configure_tasks(ts.params, allowed, use_kernel=True)
+    t0 = time.time()
+    single_task.configure_tasks(ts.params, allowed, use_kernel=True)
+    dt_k = time.time() - t0
+    record("phi/pallas_kernel(interpret)", dt_k / len(ts) * 1e6,
+           f"{len(ts)/dt_k:.0f} tasks/s")
+
+    ts_on = tasks.generate_online(0.05, 0.2, seed=0, horizon=400)
+    t0 = time.time()
+    online.schedule_online(ts_on, l=4, theta=0.9, algorithm="edl")
+    dt = time.time() - t0
+    record("online/sim_throughput", dt / 400 * 1e6,
+           f"{400/dt:.0f} slots/s, {len(ts_on)} tasks")
+    return {"jnp_tasks_per_s": len(ts) / dt_jnp}
+
+
+if __name__ == "__main__":
+    run()

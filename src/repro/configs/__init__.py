@@ -1,0 +1,14 @@
+"""Assigned architecture configs (exact figures from the assignment) and the
+input-shape registry.
+
+``get_config(arch_id)`` returns the full :class:`ModelConfig`;
+``input_specs(arch, shape, mode)`` returns ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, zero allocation) — the
+dry-run lowers against these.
+"""
+
+from repro.configs.registry import (ARCHS, SHAPES, CELLS, cell_skip_reason,
+                                    get_config, input_specs, list_cells)
+
+__all__ = ["ARCHS", "SHAPES", "CELLS", "cell_skip_reason", "get_config",
+           "input_specs", "list_cells"]

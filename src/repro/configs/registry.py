@@ -1,0 +1,130 @@
+"""Architecture registry, input shapes, and dry-run cell enumeration."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "mamba2-370m",
+    "stablelm-12b",
+    "h2o-danube-1.8b",
+    "qwen2-72b",
+    "nemotron-4-15b",
+    "internvl2-2b",
+    "moonshot-v1-16b-a3b",
+    "qwen3-moe-30b-a3b",
+    "whisper-base",
+    "recurrentgemma-2b",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# Archs whose attention is sub-quadratic / O(1)-state at decode; only these
+# run the 524k-context cell (the assignment's prescribed skip for pure
+# full-attention archs).
+LONG_CONTEXT_OK = {"mamba2-370m", "recurrentgemma-2b", "h2o-danube-1.8b"}
+
+_MOD = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+        for a in ARCHS}
+_CACHE: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _CACHE:
+        if arch not in _MOD:
+            raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+        _CACHE[arch] = importlib.import_module(_MOD[arch]).CONFIG
+    return _CACHE[arch]
+
+
+def cell_skip_reason(arch: str, shape: str) -> Optional[str]:
+    """None if the (arch x shape) cell runs; else the reason it is skipped."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return ("full quadratic attention at 524k tokens / batch 1: "
+                "unshardable batch, quadratic score matrix (DESIGN.md skip)")
+    return None
+
+
+def list_cells(include_skipped: bool = False):
+    out = []
+    for a in ARCHS:
+        for s in SHAPES:
+            reason = cell_skip_reason(a, s)
+            if reason is None or include_skipped:
+                out.append((a, s))
+    return out
+
+
+CELLS = list_cells()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell.
+
+    * train:   {tokens, labels [B, S] int32} (+ modality extras)
+    * prefill: {tokens [B, S] int32} (+ extras)
+    * decode:  {token [B] int32, pos scalar} — the cache spec comes from
+      ``Model.init_cache`` via ``jax.eval_shape`` in the dry-run.
+    """
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if spec.mode == "train":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["labels"] = _sds((B, S), jnp.int32)
+    elif spec.mode == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode
+        out["token"] = _sds((B,), jnp.int32)
+    if spec.mode in ("train", "prefill"):
+        if cfg.family == "vlm":
+            out["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                       jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = _sds((B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def input_logical_axes(arch: str, shape: str) -> Dict[str, tuple]:
+    """Logical axes for each input (for in_shardings in the dry-run)."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    out: Dict[str, tuple] = {}
+    if spec.mode == "train":
+        out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    elif spec.mode == "prefill":
+        out = {"tokens": ("batch", "seq")}
+    else:
+        out = {"token": ("batch",)}
+    if spec.mode in ("train", "prefill"):
+        if cfg.family == "vlm":
+            out["patch_embeds"] = ("batch", None, "act_embed")
+        if cfg.family == "encdec":
+            out["frames"] = ("batch", None, "act_embed")
+    return out

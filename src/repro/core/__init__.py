@@ -1,0 +1,19 @@
+"""The paper's contribution: DVFS power/performance models, the single-task
+optimum, and the EDL theta-readjustment schedulers (offline + online),
+plus the accelerator-job adapter that feeds roofline-derived LM jobs into
+the same algorithms."""
+
+from repro.core import cluster, dvfs, jobs, online, scheduling, single_task, tasks
+from repro.core.dvfs import DvfsParams, ScalingInterval, NARROW, WIDE
+from repro.core.online import schedule_online
+from repro.core.scheduling import schedule_offline
+from repro.core.single_task import configure_tasks, solve_unconstrained, solve_with_deadline
+from repro.core.tasks import TaskSet, app_library, generate_offline, generate_online
+
+__all__ = [
+    "DvfsParams", "ScalingInterval", "NARROW", "WIDE", "TaskSet",
+    "app_library", "generate_offline", "generate_online",
+    "configure_tasks", "solve_unconstrained", "solve_with_deadline",
+    "schedule_offline", "schedule_online",
+    "cluster", "dvfs", "jobs", "online", "scheduling", "single_task", "tasks",
+]

@@ -1,0 +1,192 @@
+"""Cluster state and energy accounting (paper S3.1.2, Eq. 6-7).
+
+A cluster has ``m`` servers of ``l`` CPU-GPU pairs each (we model the
+homogeneous case the paper simulates: every server has the same ``l``, the
+total pair budget is 2048).  A pair is *busy* while it executes a task, *idle*
+while its server is on but it has no task, and consumes nothing while its
+server is off.  Turning a server on costs ``Delta`` per pair; a server is
+turned off once all of its pairs have been idle for at least ``rho`` slots
+(dynamic resource sleep).
+
+Energy decomposition (Eq. 7)::
+
+    E_total = E_run + E_idle + E_overhead
+    E_run      = sum_i P_i * (mu_i - kappa_i)
+    E_idle     = P_idle * sum_{pairs} eta_kj
+    E_overhead = omega * Delta
+
+The offline objective (Eq. 6) is the special case with no overhead term and
+servers that run from t=0 until their longest pair finishes (Algorithm 3
+groups pairs into servers after the mapping is fixed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+P_IDLE = 37.0        # W, idle pair power (24 W CPU + 13 W GPU), S5.1.2
+DELTA_ON = 90.0      # J, per-pair turn on/off overhead, S5.1.2
+RHO = 2              # slots; floor(DELTA_ON / P_IDLE), S5.1.2
+
+
+@dataclasses.dataclass
+class Assignment:
+    """One scheduled task: where, when, and at which DVFS setting."""
+
+    task: int
+    pair: int
+    start: float
+    finish: float
+    v: float
+    fc: float
+    fm: float
+    power: float
+    energy: float
+    readjusted: bool = False
+
+
+@dataclasses.dataclass
+class Pair:
+    """A CPU-GPU pair's running schedule."""
+
+    idx: int
+    server: int = -1
+    mu: float = 0.0          # finish time of the last scheduled task
+    busy: float = 0.0        # cumulative busy time
+    tasks: List[int] = dataclasses.field(default_factory=list)
+
+    def add(self, task: int, start: float, duration: float):
+        self.tasks.append(task)
+        self.mu = start + duration
+        self.busy += duration
+
+
+@dataclasses.dataclass
+class Server:
+    """A server hosting ``l`` pairs, with DRS on/off bookkeeping."""
+
+    idx: int
+    pairs: List[int]
+    on: bool = False
+    on_since: float = 0.0
+    on_time: float = 0.0     # cumulative powered-on duration
+    turn_ons: int = 0        # omega contribution counts pairs, not servers
+
+    def power_on(self, t: float, pair_count: int):
+        assert not self.on
+        self.on = True
+        self.on_since = t
+        self.turn_ons += pair_count
+
+    def power_off(self, t: float):
+        assert self.on
+        self.on = False
+        self.on_time += t - self.on_since
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    """Outcome of a scheduling run (energies in Joule-equivalent W x time)."""
+
+    algorithm: str
+    e_run: float
+    e_idle: float
+    e_overhead: float
+    n_pairs: int
+    n_servers: int
+    violations: int
+    assignments: List[Assignment]
+    makespan: float = 0.0
+    feasible_pairs: bool = True
+
+    @property
+    def e_total(self) -> float:
+        return self.e_run + self.e_idle + self.e_overhead
+
+    def summary(self) -> dict:
+        return dict(algorithm=self.algorithm, e_run=self.e_run, e_idle=self.e_idle,
+                    e_overhead=self.e_overhead, e_total=self.e_total,
+                    n_pairs=self.n_pairs, n_servers=self.n_servers,
+                    violations=self.violations, makespan=self.makespan)
+
+
+def offline_idle_energy(pair_busy_end: np.ndarray, l: int, p_idle: float = P_IDLE):
+    """Algorithm 3: group pairs into servers, return (E_idle, n_servers).
+
+    Pairs are sorted by their finish time (mu) in descending order and packed
+    into servers of ``l`` consecutive pairs; each server's span F_j is the
+    longest pair in its group, and every other pair idles for F_j - tau_kj.
+    Eq. (6) sums over ALL l pair slots of a powered server — unoccupied
+    slots on a partially-filled server idle for the whole span F_j (this is
+    what makes the paper's Table-3 example favor θ=0.9 over θ=1).  Sorting
+    by finish time minimizes the summed idle gap for a fixed group size.
+    """
+    mu = np.sort(np.asarray(pair_busy_end))[::-1]
+    n = mu.shape[0]
+    e_idle = 0.0
+    n_servers = 0
+    for j in range(0, n, l):
+        group = mu[j:j + l]
+        f_j = group[0]
+        e_idle += float(np.sum(f_j - group)) + (l - group.shape[0]) * f_j
+        n_servers += 1
+    return p_idle * e_idle, n_servers
+
+
+def baseline_energy(task_set) -> float:
+    """The paper's reference point: no DVFS, l=1 (no idle energy) -- the energy
+    of running every task at the default setting, sum_i P*_i t*_i."""
+    return float(np.sum(task_set.p_star * task_set.t_star))
+
+
+class PairPool:
+    """Allocates pairs on demand and tracks the server <-> pair mapping for the
+    online simulator.  Servers are created lazily, ``l`` pairs each."""
+
+    def __init__(self, l: int, max_pairs: int = 2048):
+        self.l = l
+        self.max_pairs = max_pairs
+        self.pairs: List[Pair] = []
+        self.servers: List[Server] = []
+
+    def new_server(self, t: float) -> Server:
+        sid = len(self.servers)
+        pair_ids = []
+        for _ in range(self.l):
+            pid = len(self.pairs)
+            self.pairs.append(Pair(idx=pid, server=sid))
+            pair_ids.append(pid)
+        srv = Server(idx=sid, pairs=pair_ids)
+        srv.power_on(t, self.l)
+        self.servers.append(srv)
+        return srv
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pairs)
+
+    def feasible(self) -> bool:
+        return self.n_pairs <= self.max_pairs
+
+    def on_pairs(self) -> List[Pair]:
+        out = []
+        for srv in self.servers:
+            if srv.on:
+                out.extend(self.pairs[p] for p in srv.pairs)
+        return out
+
+    def finalize(self, t_end: float):
+        """Power everything off and return (E_idle, E_overhead, on_servers_max)."""
+        for srv in self.servers:
+            if srv.on:
+                srv.power_off(t_end)
+        e_idle = 0.0
+        omega = 0
+        for srv in self.servers:
+            omega += srv.turn_ons
+            busy = sum(self.pairs[p].busy for p in srv.pairs)
+            e_idle += srv.on_time * self.l - busy
+        return P_IDLE * e_idle, DELTA_ON * omega

@@ -1,0 +1,232 @@
+"""GPU/accelerator DVFS power, performance and energy models (paper Eq. 1-4).
+
+The paper models a DVFS-scalable accelerator with three normalized knobs:
+
+  * ``V``  - core voltage,
+  * ``fc`` - core frequency, upper-bounded by the sublinear voltage curve
+             ``fc <= g1(V) = sqrt((V - 0.5) / 2) + 0.5``,
+  * ``fm`` - memory frequency (memory *voltage* scaling is dropped: it has a
+             narrow range and negligible energy impact, paper S3.1.1).
+
+Runtime power (Eq. 1)::
+
+    P(V, fc, fm) = P0 + gamma * fm + c * V^2 * fc
+
+Execution time (Eq. 2) - the *nonlinear* accelerator-specific relation::
+
+    t(fc, fm) = D * (delta / fc + (1 - delta) / fm) + t0
+
+Energy (Eq. 3/4)::
+
+    E = P * t
+
+All functions are written with ``jax.numpy`` so they can be vmapped/jitted
+and reused verbatim by the Pallas kernel oracle; they accept plain floats and
+numpy arrays as well (jnp broadcasts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+
+
+# ---------------------------------------------------------------------------
+# Voltage/frequency curve.
+# ---------------------------------------------------------------------------
+
+# g1(V) = sqrt((V - A) / B) + C, fitted on the paper's Pascal platform with
+# A = 0.5, B = 2.0, C = 0.5 (S5.1.1).
+G1_A = 0.5
+G1_B = 2.0
+G1_C = 0.5
+
+
+def g1(v: Array) -> Array:
+    """Maximum core frequency allowed at core voltage ``v`` (sublinear)."""
+    v = jnp.asarray(v)
+    return jnp.sqrt(jnp.maximum(v - G1_A, 0.0) / G1_B) + G1_C
+
+
+def g1_float(v: float) -> float:
+    """Pure-python g1 for static (non-traced) uses such as interval bounds."""
+    import math
+
+    return math.sqrt(max(v - G1_A, 0.0) / G1_B) + G1_C
+
+
+def g1_inv(fc: Array) -> Array:
+    """Minimum core voltage able to sustain core frequency ``fc``."""
+    fc = jnp.asarray(fc)
+    return G1_B * jnp.square(jnp.maximum(fc - G1_C, 0.0)) + G1_A
+
+
+# ---------------------------------------------------------------------------
+# Scaling intervals (paper S5.1.1).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingInterval:
+    """Normalized DVFS box ``V in [v_min, v_max], fm in [fm_min, fm_max],
+    fc in [fc_min, g1(V)]``."""
+
+    v_min: float
+    v_max: float
+    fc_min: float
+    fm_min: float
+    fm_max: float
+
+    @property
+    def fc_max(self) -> float:
+        return g1_float(self.v_max)
+
+    def clamp(self, v: Array, fc: Array, fm: Array):
+        v = jnp.clip(v, self.v_min, self.v_max)
+        fc = jnp.clip(fc, self.fc_min, g1(v))
+        fm = jnp.clip(fm, self.fm_min, self.fm_max)
+        return v, fc, fm
+
+
+# The *analytical* ("Wide") interval used for the simulations: the paper argues
+# for studying the potential of DVFS with fc_max = g1(1.2) ~= 1.0916.
+WIDE = ScalingInterval(v_min=0.5, v_max=1.2, fc_min=0.5, fm_min=0.5, fm_max=1.2)
+
+# The realistic ("Narrow") GTX-1080Ti interval.
+NARROW = ScalingInterval(v_min=0.8, v_max=1.24, fc_min=0.89, fm_min=0.8, fm_max=1.1)
+
+# Default (normalized) operating point: V = fc = fm = 1.
+DEFAULT_SETTING = (1.0, 1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Task DVFS parameters.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DvfsParams:
+    """Per-task model constants. Every field may be a scalar or an array of
+    shape ``[n]`` (a batch of tasks).
+
+    ``p0``    - frequency-independent power (static + host share), Watts.
+    ``gamma`` - memory-frequency power sensitivity, Watts per normalized fm.
+    ``c``     - core dynamic-power coefficient (``c * V^2 * fc``), Watts.
+    ``big_d`` - frequency-sensitive execution-time component ``D``, seconds.
+    ``delta`` - core-frequency sensitivity in ``[0, 1]``.
+    ``t0``    - frequency-insensitive execution-time component, seconds.
+    """
+
+    p0: Array
+    gamma: Array
+    c: Array
+    big_d: Array
+    delta: Array
+    t0: Array
+
+    def astuple(self):
+        return (self.p0, self.gamma, self.c, self.big_d, self.delta, self.t0)
+
+    @property
+    def n(self) -> int:
+        return int(np.shape(np.asarray(self.p0))[0]) if np.ndim(self.p0) else 1
+
+    def default_power(self) -> Array:
+        """P* = P(1, 1, 1)."""
+        return power(self, 1.0, 1.0, 1.0)
+
+    def default_time(self) -> Array:
+        """t* = t(1, 1) = D + t0."""
+        return self.big_d + self.t0
+
+    def default_energy(self) -> Array:
+        return self.default_power() * self.default_time()
+
+    def __getitem__(self, idx) -> "DvfsParams":
+        return DvfsParams(*(np.asarray(f)[idx] for f in self.astuple()))
+
+    @staticmethod
+    def stack(items) -> "DvfsParams":
+        cols = list(zip(*(it.astuple() for it in items)))
+        return DvfsParams(*(np.asarray(col, dtype=np.float64) for col in cols))
+
+
+def power(params: DvfsParams, v: Array, fc: Array, fm: Array) -> Array:
+    """Runtime power, Eq. (1)."""
+    return params.p0 + params.gamma * fm + params.c * jnp.square(v) * fc
+
+
+def exec_time(params: DvfsParams, fc: Array, fm: Array) -> Array:
+    """Execution time, Eq. (2)."""
+    return params.big_d * (params.delta / fc + (1.0 - params.delta) / fm) + params.t0
+
+
+def energy(params: DvfsParams, v: Array, fc: Array, fm: Array) -> Array:
+    """Task energy, Eq. (4): E = P * t."""
+    return power(params, v, fc, fm) * exec_time(params, fc, fm)
+
+
+def min_time(params: DvfsParams, interval: ScalingInterval) -> Array:
+    """The fastest achievable execution time inside the scaling box."""
+    return exec_time(params, interval.fc_max, interval.fm_max)
+
+
+def optimal_fm(params: DvfsParams, v: Array, fc: Array, interval: ScalingInterval) -> Array:
+    """Closed-form optimal memory frequency for fixed (V, fc), paper S4.1.
+
+    f_xi = sqrt((P0 + c V^2 fc) * D (1-delta) / (gamma * (t0 + D delta / fc))),
+    clamped to [fm_min, fm_max].  gamma == 0 or delta == 1 degenerate to
+    fm_min (memory frequency does not help time, only costs power).
+    """
+    num = (params.p0 + params.c * jnp.square(v) * fc) * params.big_d * (1.0 - params.delta)
+    den = params.gamma * (params.t0 + params.big_d * params.delta / fc)
+    f_xi = jnp.sqrt(num / jnp.maximum(den, 1e-30))
+    # gamma==0: power is flat in fm while time decreases => fm_max optimal.
+    f_xi = jnp.where(params.gamma <= 0.0, interval.fm_max, f_xi)
+    return jnp.clip(f_xi, interval.fm_min, interval.fm_max)
+
+
+# ---------------------------------------------------------------------------
+# TPU adaptation constants (DESIGN.md S3).
+#
+# The scheduler's task abstraction is hardware-agnostic; these constants give
+# the fleet simulation a v5e-class flavour when scheduling LM jobs whose delta
+# comes from the roofline analysis.  Normalized exactly like the GPU numbers.
+# ---------------------------------------------------------------------------
+
+TPU_V5E_CHIP = dict(
+    # Peak board power envelope per chip (W), static + host share, HBM share,
+    # and core dynamic share at the default operating point.
+    p_peak=200.0,
+    p0_frac=0.30,     # host/static/interconnect share
+    gamma_frac=0.15,  # HBM-frequency-proportional share
+    # remainder is c * V^2 * fc at (1,1,1)
+    p_idle=37.0,      # idle pair power (kept identical to the paper's setup)
+    delta_on=90.0,    # turn on/off energy overhead (J), paper S5.1.2
+)
+
+
+def tpu_task_params(duration_s: float, delta: float, t0_frac: float = 0.1,
+                    chip: dict = TPU_V5E_CHIP) -> DvfsParams:
+    """Build paper-model parameters for an accelerator job.
+
+    ``duration_s`` - default execution time t* at the (1,1,1) operating point.
+    ``delta``      - compute-boundness from the roofline analysis
+                     (T_compute / (T_compute + T_memory)).
+    ``t0_frac``    - fraction of t* that does not scale with frequency
+                     (data pipeline, host gaps).
+    """
+    p_peak = chip["p_peak"]
+    p0 = p_peak * chip["p0_frac"]
+    gamma = p_peak * chip["gamma_frac"]
+    c = p_peak - p0 - gamma
+    t0 = duration_s * t0_frac
+    big_d = duration_s - t0
+    return DvfsParams(p0=p0, gamma=gamma, c=c, big_d=big_d, delta=float(delta), t0=t0)

@@ -1,0 +1,305 @@
+"""Online scheduling: EDL theta-readjustment + DRS, and the bin-packing
+baseline (paper S4.2.2, Algorithms 4-6).
+
+Time is divided into unit slots (one minute in the paper's day-long
+simulation).  The system starts with an offline batch at ``T = 0``; online
+tasks arrive at slots ``T >= 1``.  Each slot the simulator
+
+1. *processes leaving tasks* - pairs whose last task finished become idle;
+2. *turns servers off* (DRS) - a server is powered off once **all** of its
+   pairs have been idle for at least ``rho`` slots, paying no further idle
+   power but incurring a ``Delta``-per-pair overhead on the next power-on;
+3. *assigns newly arrived tasks* (Algorithm 5) - per-task optimal DVFS
+   configuration first (deadline-aware), then EDF order; each task goes to
+   the ON pair with the shortest processing time if it fits, else a
+   theta-readjustment shrinks its execution window, else a fresh server is
+   powered on.
+
+The bin-packing baseline (Algorithm 6) replaces the pair-selection rule with
+worst-fit on utilization for the offline batch and first-fit for online
+arrivals, with no readjustment - the heuristic used by Liu et al. [41].
+
+Energy accounting follows Eq. (7):
+
+    E_total = E_run + E_idle + E_overhead
+            = sum_i P_i (mu_i - kappa_i) + P_idle * sum idle periods
+              + Delta * (number of pair turn-ons)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import cluster as cl
+from repro.core import dvfs, single_task
+from repro.core.dvfs import ScalingInterval
+from repro.core.single_task import TaskConfig
+from repro.core.tasks import TaskSet
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class _PairState:
+    idx: int
+    server: int
+    mu: float = 0.0       # finish time of the last assigned task
+    busy: float = 0.0     # cumulative busy duration
+
+
+@dataclasses.dataclass
+class _ServerState:
+    idx: int
+    pairs: List[int]
+    on: bool = False
+    on_since: float = 0.0
+    on_time: float = 0.0
+    turn_ons: int = 0     # counted in pair units (omega)
+
+    def power_on(self, t: float):
+        self.on = True
+        self.on_since = t
+        self.turn_ons += len(self.pairs)
+
+    def power_off(self, t: float):
+        self.on = False
+        self.on_time += t - self.on_since
+
+
+class OnlineCluster:
+    """Slot-driven cluster simulator shared by EDL and bin-packing."""
+
+    def __init__(self, l: int, rho: int = cl.RHO, p_idle: float = cl.P_IDLE,
+                 delta_on: float = cl.DELTA_ON, max_pairs: int = 2048):
+        self.l = l
+        self.rho = rho
+        self.p_idle = p_idle
+        self.delta_on = delta_on
+        self.max_pairs = max_pairs
+        self.pairs: List[_PairState] = []
+        self.servers: List[_ServerState] = []
+
+    # -- state interrogation ------------------------------------------------
+    def on_pair_ids(self) -> List[int]:
+        out: List[int] = []
+        for srv in self.servers:
+            if srv.on:
+                out.extend(srv.pairs)
+        return out
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pairs)
+
+    def n_on_servers(self) -> int:
+        return sum(1 for s in self.servers if s.on)
+
+    # -- transitions ---------------------------------------------------------
+    def new_server(self, t: float) -> _ServerState:
+        sid = len(self.servers)
+        pair_ids = []
+        for _ in range(self.l):
+            pid = len(self.pairs)
+            self.pairs.append(_PairState(idx=pid, server=sid, mu=t))
+            pair_ids.append(pid)
+        srv = _ServerState(idx=sid, pairs=pair_ids)
+        srv.power_on(t)
+        self.servers.append(srv)
+        return srv
+
+    def wake_server(self, srv: _ServerState, t: float):
+        srv.power_on(t)
+        for pid in srv.pairs:
+            self.pairs[pid].mu = t  # an awakened pair is free *now*
+
+    def acquire_pair(self, t: float) -> _PairState:
+        """A fresh pair: prefer re-powering an off server over building one."""
+        for srv in self.servers:
+            if not srv.on:
+                self.wake_server(srv, t)
+                return self.pairs[srv.pairs[0]]
+        return self.pairs[self.new_server(t).pairs[0]]
+
+    def drs_sweep(self, t: float):
+        """Turn off every server whose pairs have all been idle >= rho."""
+        for srv in self.servers:
+            if not srv.on:
+                continue
+            mu_max = max(self.pairs[p].mu for p in srv.pairs)
+            if t - mu_max >= self.rho - _EPS:
+                srv.power_off(t)
+
+    def assign(self, pair: _PairState, start: float, duration: float):
+        pair.mu = start + duration
+        pair.busy += duration
+
+    # -- energy --------------------------------------------------------------
+    def finalize(self):
+        """Power off remaining servers and return (E_idle, E_overhead)."""
+        for srv in self.servers:
+            if srv.on:
+                mu_max = max(self.pairs[p].mu for p in srv.pairs)
+                srv.power_off(mu_max + self.rho)
+        e_idle = 0.0
+        omega = 0
+        for srv in self.servers:
+            omega += srv.turn_ons
+            busy = sum(self.pairs[p].busy for p in srv.pairs)
+            e_idle += srv.on_time * self.l - busy
+        return self.p_idle * e_idle, self.delta_on * omega
+
+
+def _slot_groups(task_set: TaskSet):
+    """Group task indices by integer arrival slot, ascending."""
+    arrival = np.asarray(task_set.arrival)
+    slots = np.unique(arrival.astype(np.int64))
+    return [(int(s), np.nonzero(arrival.astype(np.int64) == s)[0]) for s in slots]
+
+
+def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
+                    algorithm: str = "edl", use_dvfs: bool = True,
+                    interval: ScalingInterval = dvfs.WIDE,
+                    rho: int = cl.RHO, p_idle: float = cl.P_IDLE,
+                    delta_on: float = cl.DELTA_ON,
+                    use_kernel: bool = False) -> cl.ScheduleResult:
+    """Run the online simulation end to end (Algorithms 4-6).
+
+    ``algorithm`` is ``"edl"`` (Algorithm 5, SPT + theta-readjustment) or
+    ``"bin"`` (Algorithm 6, worst-fit utilization for the offline batch then
+    first-fit online).
+    """
+    algorithm = algorithm.lower()
+    if algorithm not in ("edl", "bin"):
+        raise ValueError(f"unknown online algorithm {algorithm!r}")
+
+    deadline = np.asarray(task_set.deadline, dtype=np.float64)
+    arrival = np.asarray(task_set.arrival, dtype=np.float64)
+    clu = OnlineCluster(l, rho=rho, p_idle=p_idle, delta_on=delta_on)
+    assignments: List[cl.Assignment] = []
+    violations = 0
+
+    import heapq
+
+    for slot, idx in _slot_groups(task_set):
+        t_now = float(slot)
+        clu.drs_sweep(t_now)
+
+        # Phase 1 (Alg 5, lines 1-4): per-task optimal configuration.
+        sub = task_set.subset(idx)
+        if use_dvfs:
+            cfg = single_task.configure_tasks(
+                sub.params, deadline[idx] - t_now, interval, use_kernel=use_kernel)
+        else:
+            from repro.core.scheduling import default_config
+            cfg = default_config(sub)
+        violations += int(np.sum(~cfg.feasible))
+
+        order = np.argsort(deadline[idx], kind="stable")  # EDF
+
+        if algorithm == "bin" and slot == 0:
+            # Algorithm 6 offline phase: worst-fit on task utilization.
+            _binpack_offline(clu, task_set, idx, order, cfg, t_now, assignments)
+            continue
+
+        for r in order:
+            r = int(r)
+            gidx = int(idx[r])
+            d = deadline[gidx]
+            t_hat = float(cfg.t_hat[r])
+
+            on_ids = clu.on_pair_ids()
+            placed = False
+            if on_ids:
+                if algorithm == "edl":
+                    cand = [min(on_ids, key=lambda p: (clu.pairs[p].mu, p))]
+                else:  # bin: first-fit in pair-id order
+                    cand = sorted(on_ids)
+                for pid in cand:
+                    pair = clu.pairs[pid]
+                    start = max(t_now, pair.mu)
+                    if d - start >= t_hat - _EPS:
+                        clu.assign(pair, start, t_hat)
+                        assignments.append(_mk(gidx, pid, start, cfg, r))
+                        placed = True
+                        break
+                if not placed and algorithm == "edl" and theta < 1.0:
+                    pid = cand[0]
+                    pair = clu.pairs[pid]
+                    start = max(t_now, pair.mu)
+                    t_theta = max(theta * t_hat, float(cfg.t_min[r]))
+                    window = d - start
+                    if window >= t_theta - _EPS:
+                        ov = single_task.readjust(task_set.params[gidx],
+                                                  float(window), interval)
+                        clu.assign(pair, start, ov[3])
+                        assignments.append(cl.Assignment(
+                            task=gidx, pair=pid, start=float(start),
+                            finish=float(start + ov[3]), v=ov[0], fc=ov[1],
+                            fm=ov[2], power=ov[4], energy=ov[5],
+                            readjusted=True))
+                        placed = True
+            if not placed:
+                pair = clu.acquire_pair(t_now)
+                start = max(t_now, pair.mu)
+                clu.assign(pair, start, t_hat)
+                assignments.append(_mk(gidx, pair.idx, start, cfg, r))
+
+    e_idle, e_overhead = clu.finalize()
+    e_run = float(sum(a.energy for a in assignments))
+    for a in assignments:
+        if a.finish > deadline[a.task] + 1e-6:
+            violations += 1
+    mk = max((a.finish for a in assignments), default=0.0)
+    return cl.ScheduleResult(
+        algorithm=f"online-{algorithm}{'+dvfs' if use_dvfs else ''}",
+        e_run=e_run, e_idle=e_idle, e_overhead=e_overhead,
+        n_pairs=clu.n_pairs, n_servers=len(clu.servers),
+        violations=violations, assignments=assignments, makespan=mk,
+        feasible_pairs=clu.n_pairs <= clu.max_pairs,
+    )
+
+
+def _mk(task: int, pid: int, start: float, cfg: TaskConfig, row: int) -> cl.Assignment:
+    return cl.Assignment(
+        task=task, pair=pid, start=float(start),
+        finish=float(start + cfg.t_hat[row]), v=float(cfg.v[row]),
+        fc=float(cfg.fc[row]), fm=float(cfg.fm[row]),
+        power=float(cfg.p_hat[row]), energy=float(cfg.e_hat[row]))
+
+
+def _binpack_offline(clu: OnlineCluster, task_set: TaskSet, idx, order,
+                     cfg: TaskConfig, t_now: float,
+                     assignments: List[cl.Assignment]):
+    """Algorithm 6, lines 1-7: worst-fit on utilization, cap at 1.0.
+
+    The *optimal task utilization* is ``u_hat = t_hat / (d - a)``; the
+    worst-fit heuristic sends each task to the pair with the lowest current
+    utilization, opening a new pair when the best candidate would exceed 1.
+    """
+    deadline = np.asarray(task_set.deadline, dtype=np.float64)
+    pair_util: dict[int, float] = {}
+    for r in order:
+        r = int(r)
+        gidx = int(idx[r])
+        t_hat = float(cfg.t_hat[r])
+        u_hat = t_hat / max(deadline[gidx] - t_now, _EPS)
+        on_ids = clu.on_pair_ids()
+        best: Optional[int] = None
+        if on_ids:
+            best = min(on_ids, key=lambda p: (pair_util.get(p, 0.0), p))
+            pair = clu.pairs[best]
+            start = max(t_now, pair.mu)
+            if (pair_util.get(best, 0.0) + u_hat > 1.0 + _EPS or
+                    deadline[gidx] - start < t_hat - _EPS):
+                best = None
+        if best is None:
+            pair = clu.acquire_pair(t_now)
+            best = pair.idx
+        pair = clu.pairs[best]
+        start = max(t_now, pair.mu)
+        clu.assign(pair, start, t_hat)
+        pair_util[best] = pair_util.get(best, 0.0) + u_hat
+        assignments.append(_mk(gidx, best, start, cfg, r))

@@ -1,0 +1,186 @@
+"""Offline scheduling: the EDL theta-readjustment algorithm and baselines
+(paper S4.2.1, Algorithms 1-3; baselines of S5.3).
+
+All offline algorithms share the same three-phase structure:
+
+1. **Algorithm 1** - per-task optimal DVFS configuration (deadline-aware);
+   deadline-prior tasks get the boundary solution, energy-prior tasks get the
+   unconstrained optimum.
+2. **Task packing** - deadline-prior tasks are pinned to fresh pairs first
+   (they must start at t=0), then the energy-prior tasks are placed in EDF
+   order by the policy-specific rule:
+
+   * ``edl``    - shortest-processing-time pair (worst fit) **with
+     theta-readjustment**: if the task does not fit at its optimal length, its
+     execution is allowed to shrink to ``max(theta * t_hat, t_min)`` by
+     re-solving the DVFS setting with the remaining window as deadline
+     (Algorithm 2, lines 16-19).
+   * ``edf-wf`` - worst fit (min mu), no readjustment;
+   * ``edf-bf`` - best fit (max mu among fitting pairs), no readjustment;
+   * ``lpt-ff`` - longest-processing-time order, first fit, no readjustment.
+
+3. **Algorithm 3** - pairs are sorted by finish time and grouped into servers
+   of ``l``; idle energy is ``P_idle * sum_j sum_k (F_j - tau_kj)`` (Eq. 6).
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from repro.core import cluster as cl
+from repro.core import dvfs, single_task
+from repro.core.dvfs import DvfsParams, ScalingInterval
+from repro.core.single_task import TaskConfig
+from repro.core.tasks import TaskSet
+
+_EPS = 1e-9
+
+
+def default_config(task_set: TaskSet) -> TaskConfig:
+    """A no-DVFS configuration: every task runs at (1, 1, 1)."""
+    n = len(task_set)
+    t_star = task_set.t_star
+    p_star = task_set.p_star
+    allowed = task_set.deadline - task_set.arrival
+    ones = np.ones(n)
+    return TaskConfig(
+        v=ones.copy(), fc=ones.copy(), fm=ones.copy(),
+        t_hat=t_star.copy(), p_hat=p_star.copy(), e_hat=(p_star * t_star),
+        t_min=t_star.copy(),  # no scaling => no shrink room
+        deadline_prior=(t_star > allowed + _EPS),
+        feasible=(t_star <= allowed + _EPS),
+        n_deadline_prior=int(np.sum(t_star > allowed + _EPS)),
+    )
+
+
+def configure(task_set: TaskSet, use_dvfs: bool,
+              interval: ScalingInterval = dvfs.WIDE,
+              use_kernel: bool = False) -> TaskConfig:
+    """Algorithm 1 over a task set (or the no-DVFS default configuration)."""
+    if not use_dvfs:
+        return default_config(task_set)
+    allowed = task_set.deadline - task_set.arrival
+    return single_task.configure_tasks(task_set.params, allowed, interval,
+                                       use_kernel=use_kernel)
+
+
+def _assignment(task: int, pair: int, start: float, cfg: TaskConfig,
+                override=None, readjusted=False) -> cl.Assignment:
+    if override is None:
+        v, fc, fm, t, p, e = (cfg.v[task], cfg.fc[task], cfg.fm[task],
+                              cfg.t_hat[task], cfg.p_hat[task], cfg.e_hat[task])
+    else:
+        v, fc, fm, t, p, e = override
+    return cl.Assignment(task=task, pair=pair, start=float(start),
+                         finish=float(start + t), v=float(v), fc=float(fc),
+                         fm=float(fm), power=float(p), energy=float(e),
+                         readjusted=readjusted)
+
+
+def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
+                     algorithm: str = "edl", use_dvfs: bool = True,
+                     interval: ScalingInterval = dvfs.WIDE,
+                     p_idle: float = cl.P_IDLE,
+                     cfg: Optional[TaskConfig] = None,
+                     use_kernel: bool = False) -> cl.ScheduleResult:
+    """Run one offline scheduling algorithm end to end (Algorithms 1+2+3)."""
+    algorithm = algorithm.lower()
+    if algorithm not in ("edl", "edf-wf", "edf-bf", "lpt-ff"):
+        raise ValueError(f"unknown offline algorithm {algorithm!r}")
+    if cfg is None:
+        cfg = configure(task_set, use_dvfs, interval, use_kernel=use_kernel)
+
+    n = len(task_set)
+    deadline = np.asarray(task_set.deadline, dtype=np.float64)
+    assignments: list[cl.Assignment] = []
+    violations = int(np.sum(~cfg.feasible))
+
+    pair_mu: list[float] = []       # finish time per pair, indexed by pair id
+
+    # --- Phase 2a: deadline-prior tasks, each started at t=0 on a fresh pair.
+    dp_idx = np.nonzero(cfg.deadline_prior)[0]
+    for t_idx in dp_idx[np.argsort(deadline[dp_idx], kind="stable")]:
+        pid = len(pair_mu)
+        pair_mu.append(float(cfg.t_hat[t_idx]))
+        assignments.append(_assignment(int(t_idx), pid, 0.0, cfg))
+
+    # --- Phase 2b: energy-prior tasks by the policy rule.
+    ep_idx = np.nonzero(~cfg.deadline_prior)[0]
+    if algorithm == "lpt-ff":
+        order = ep_idx[np.argsort(-cfg.t_hat[ep_idx], kind="stable")]
+    else:
+        order = ep_idx[np.argsort(deadline[ep_idx], kind="stable")]
+
+    if algorithm in ("edl", "edf-wf"):
+        # Maintain a min-heap over pair finish times (SPT / worst fit).
+        heap = [(mu, pid) for pid, mu in enumerate(pair_mu)]
+        heapq.heapify(heap)
+        for t_idx in order:
+            t_idx = int(t_idx)
+            d = deadline[t_idx]
+            t_hat = float(cfg.t_hat[t_idx])
+            if heap:
+                mu_spt, pid = heap[0]
+            else:
+                mu_spt, pid = np.inf, -1
+            if pid >= 0 and d - mu_spt >= t_hat - _EPS:
+                heapq.heapreplace(heap, (mu_spt + t_hat, pid))
+                pair_mu[pid] = mu_spt + t_hat
+                assignments.append(_assignment(t_idx, pid, mu_spt, cfg))
+                continue
+            if algorithm == "edl" and pid >= 0:
+                t_theta = max(theta * t_hat, float(cfg.t_min[t_idx]))
+                window = d - mu_spt
+                if window >= t_theta - _EPS:
+                    # theta-readjustment: re-solve with the window as deadline.
+                    override = single_task.readjust(
+                        task_set.params[t_idx], float(window), interval)
+                    heapq.heapreplace(heap, (mu_spt + override[3], pid))
+                    pair_mu[pid] = mu_spt + override[3]
+                    assignments.append(_assignment(t_idx, pid, mu_spt, cfg,
+                                                   override, readjusted=True))
+                    continue
+            pid = len(pair_mu)
+            pair_mu.append(t_hat)
+            heapq.heappush(heap, (t_hat, pid))
+            assignments.append(_assignment(t_idx, pid, 0.0, cfg))
+    else:
+        # edf-bf (tightest fitting pair) and lpt-ff (first fitting pair):
+        # linear scans; pair counts stay in the low thousands.
+        mus = np.asarray(pair_mu, dtype=np.float64)
+        for t_idx in order:
+            t_idx = int(t_idx)
+            d = deadline[t_idx]
+            t_hat = float(cfg.t_hat[t_idx])
+            fits = np.nonzero(d - mus >= t_hat - _EPS)[0]
+            if fits.size:
+                pid = int(fits[np.argmax(mus[fits])]) if algorithm == "edf-bf" \
+                    else int(fits[0])
+                start = float(mus[pid])
+                mus[pid] += t_hat
+            else:
+                pid = mus.shape[0]
+                mus = np.append(mus, t_hat)
+                start = 0.0
+            assignments.append(_assignment(t_idx, pid, start, cfg))
+        pair_mu = mus.tolist()
+
+    # --- Phase 3: Algorithm 3 server grouping + Eq. (6) energies.
+    e_run = float(sum(a.energy for a in assignments))
+    busy_end = np.asarray(pair_mu, dtype=np.float64)
+    e_idle, n_servers = cl.offline_idle_energy(busy_end, l, p_idle) \
+        if busy_end.size else (0.0, 0)
+    for a in assignments:
+        if a.finish > deadline[a.task] + 1e-6:
+            violations += 1
+    return cl.ScheduleResult(
+        algorithm=f"{algorithm}{'+dvfs' if use_dvfs else ''}",
+        e_run=e_run, e_idle=e_idle, e_overhead=0.0,
+        n_pairs=len(pair_mu), n_servers=n_servers, violations=violations,
+        assignments=assignments,
+        makespan=float(busy_end.max()) if busy_end.size else 0.0,
+        feasible_pairs=len(pair_mu) <= 2048,
+    )

@@ -1,0 +1,295 @@
+"""Single-task DVFS optimization (paper S4.1, Algorithm 1).
+
+Two sub-problems, both reduced to a 1-D minimization:
+
+* **Unconstrained** ``argmin E(V, fc, fm)``: the paper's Theorem 1 shows
+  ``dE/dV > 0`` everywhere, so the optimum has the *minimum voltage that
+  sustains the chosen core frequency*, ``V = max(v_min, g1^{-1}(fc))``; and for
+  fixed ``(V, fc)`` the optimal memory frequency has the closed form
+  :func:`repro.core.dvfs.optimal_fm`.  That leaves a single decision variable
+  ``fc in [fc_min, g1(v_max)]`` which we minimize with a coarse grid followed
+  by golden-section refinement (the energy curve is unimodal on the analytic
+  interval where P is strictly convex; the grid stage guards against the
+  clamped-fm kinks).
+
+* **Deadline-constrained** (deadline-prior tasks, ``t_hat > d - a``): the
+  optimum sits on the time boundary ``t(fc, fm) = allowed``.  Parametrizing by
+  ``fm``, the required core frequency is
+  ``fc_req(fm) = D delta / (allowed - t0 - D (1 - delta) / fm)`` and
+  ``V = max(v_min, g1^{-1}(fc))``; again a 1-D search over ``fm``.
+
+Everything is vectorized over a batch of tasks and jit-compatible; it is both
+the production solver and the oracle for the ``dvfs_opt`` Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dvfs
+from repro.core.dvfs import DvfsParams, ScalingInterval
+
+INV_PHI = 0.6180339887498949  # 1/golden ratio
+GRID_POINTS = 65
+GOLDEN_ITERS = 40
+
+
+class DvfsSolution(NamedTuple):
+    """Optimal setting for a (batch of) task(s)."""
+
+    v: jnp.ndarray
+    fc: jnp.ndarray
+    fm: jnp.ndarray
+    time: jnp.ndarray
+    power: jnp.ndarray
+    energy: jnp.ndarray
+    deadline_prior: jnp.ndarray  # bool: was the deadline binding?
+    feasible: jnp.ndarray        # bool: can the deadline be met at all?
+
+
+# ---------------------------------------------------------------------------
+# Unconstrained optimum.
+# ---------------------------------------------------------------------------
+
+
+def _energy_of_fc(params: DvfsParams, fc, interval: ScalingInterval):
+    """Energy along the optimal-V / optimal-fm manifold, as a function of fc."""
+    v = jnp.maximum(interval.v_min, dvfs.g1_inv(fc))
+    fm = dvfs.optimal_fm(params, v, fc, interval)
+    return dvfs.energy(params, v, fc, fm), (v, fm)
+
+
+def _golden_minimize(fn, lo, hi, iters: int = GOLDEN_ITERS):
+    """Vectorized golden-section minimization of ``fn`` over ``[lo, hi]``."""
+
+    def body(state, _):
+        lo, hi = state
+        d = (hi - lo) * INV_PHI
+        x1 = hi - d
+        x2 = lo + d
+        f1 = fn(x1)
+        f2 = fn(x2)
+        shrink_right = f1 < f2  # minimum is in [lo, x2]
+        new_lo = jnp.where(shrink_right, lo, x1)
+        new_hi = jnp.where(shrink_right, x2, hi)
+        return (new_lo, new_hi), None
+
+    (lo, hi), _ = jax.lax.scan(body, (lo, hi), None, length=iters)
+    return 0.5 * (lo + hi)
+
+
+def _grid_then_golden(fn, lo, hi, n_grid: int = GRID_POINTS):
+    """Coarse grid scan to bracket the global minimum, then golden refine.
+
+    ``lo``/``hi`` may be per-task arrays. Returns the argmin x (same shape).
+    """
+    ts = jnp.linspace(0.0, 1.0, n_grid)
+
+    def eval_at(frac):
+        return fn(lo + (hi - lo) * frac)
+
+    vals = jax.vmap(eval_at)(ts)  # [n_grid, batch...]
+    best = jnp.argmin(vals, axis=0)
+    step = 1.0 / (n_grid - 1)
+    frac_lo = jnp.clip(best * step - step, 0.0, 1.0)
+    frac_hi = jnp.clip(best * step + step, 0.0, 1.0)
+    x = _golden_minimize(lambda f: fn(lo + (hi - lo) * f), frac_lo, frac_hi)
+    return lo + (hi - lo) * x
+
+
+@partial(jax.jit, static_argnames=("interval",))
+def solve_unconstrained(params: DvfsParams, interval: ScalingInterval = dvfs.WIDE) -> DvfsSolution:
+    """argmin_{V, fc, fm} E for each task, ignoring deadlines (paper Eq. 9)."""
+    params = DvfsParams(*(jnp.asarray(f, jnp.float32) for f in params.astuple()))
+
+    def efc(fc):
+        return _energy_of_fc(params, fc, interval)[0]
+
+    lo = jnp.full_like(params.big_d, interval.fc_min)
+    hi = jnp.full_like(params.big_d, interval.fc_max)
+    fc = _grid_then_golden(efc, lo, hi)
+    e, (v, fm) = _energy_of_fc(params, fc, interval)
+    t = dvfs.exec_time(params, fc, fm)
+    p = dvfs.power(params, v, fc, fm)
+    true_ = jnp.ones_like(e, dtype=bool)
+    return DvfsSolution(v, fc, fm, t, p, e, ~true_, true_)
+
+
+# ---------------------------------------------------------------------------
+# Deadline-constrained optimum.
+# ---------------------------------------------------------------------------
+
+
+def _deadline_energy_of_fm(params: DvfsParams, fm, allowed, interval: ScalingInterval):
+    """Energy on the ``t = allowed`` boundary parametrized by fm.
+
+    Infeasible fm (required fc above fc_max, or non-positive time budget for
+    the core component) get +inf energy.
+    """
+    slack = allowed - params.t0 - params.big_d * (1.0 - params.delta) / fm
+    fc_req = params.big_d * params.delta / jnp.maximum(slack, 1e-30)
+    # delta == 0: any fc meets the deadline; run the core floor.
+    fc_req = jnp.where(params.delta <= 0.0, interval.fc_min, fc_req)
+    infeasible = (slack <= 0.0) & (params.delta > 0.0)
+    fc = jnp.clip(fc_req, interval.fc_min, interval.fc_max)
+    v = jnp.maximum(interval.v_min, dvfs.g1_inv(fc))
+    t = dvfs.exec_time(params, fc, fm)
+    e = dvfs.power(params, v, fc, fm) * t
+    e = jnp.where(infeasible | (fc_req > interval.fc_max + 1e-6), jnp.inf, e)
+    return e, (v, fc)
+
+
+@partial(jax.jit, static_argnames=("interval",))
+def solve_with_deadline(params: DvfsParams, allowed,
+                        interval: ScalingInterval = dvfs.WIDE) -> DvfsSolution:
+    """Optimal setting subject to ``t <= allowed`` (Algorithm 1 body).
+
+    Tasks whose unconstrained optimum already fits (``t_hat <= allowed``) keep
+    it (energy-prior); the rest are re-solved on the deadline boundary
+    (deadline-prior).  Tasks that cannot meet the deadline even at maximum
+    frequencies are flagged infeasible and returned at max speed.
+    """
+    params = DvfsParams(*(jnp.asarray(f, jnp.float32) for f in params.astuple()))
+    allowed = jnp.asarray(allowed, jnp.float32)
+    unc = solve_unconstrained(params, interval)
+    energy_prior = unc.time <= allowed + 1e-6
+
+    def efm(fm):
+        return _deadline_energy_of_fm(params, fm, allowed, interval)[0]
+
+    lo = jnp.full_like(params.big_d, interval.fm_min)
+    hi = jnp.full_like(params.big_d, interval.fm_max)
+    fm = _grid_then_golden(efm, lo, hi)
+    e, (v, fc) = _deadline_energy_of_fm(params, fm, allowed, interval)
+    t = dvfs.exec_time(params, fc, fm)
+    p = dvfs.power(params, v, fc, fm)
+
+    # Infeasible deadline => max speed, still report honestly.
+    tmin = dvfs.min_time(params, interval)
+    feasible = allowed >= tmin - 1e-6
+    vmax = jnp.full_like(v, interval.v_max)
+    fcmax = jnp.full_like(fc, interval.fc_max)
+    fmmax = jnp.full_like(fm, interval.fm_max)
+
+    def pick(con_val, unc_val, max_val):
+        x = jnp.where(energy_prior, unc_val, con_val)
+        return jnp.where(feasible, x, max_val)
+
+    v = pick(v, unc.v, vmax)
+    fc = pick(fc, unc.fc, fcmax)
+    fm = pick(fm, unc.fm, fmmax)
+    t = dvfs.exec_time(params, fc, fm)
+    p = dvfs.power(params, v, fc, fm)
+    e = p * t
+    return DvfsSolution(v, fc, fm, t, p, e, ~energy_prior, feasible)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: voltage/frequency configuration for a task set.
+# ---------------------------------------------------------------------------
+
+
+class TaskConfig(NamedTuple):
+    """Numpy view of Algorithm 1's output, consumed by the schedulers."""
+
+    v: np.ndarray
+    fc: np.ndarray
+    fm: np.ndarray
+    t_hat: np.ndarray          # optimized execution time (paper's t-hat / t-hat')
+    p_hat: np.ndarray
+    e_hat: np.ndarray
+    t_min: np.ndarray          # fastest achievable time (theta floor)
+    deadline_prior: np.ndarray
+    feasible: np.ndarray
+    n_deadline_prior: int
+
+
+def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvfs.WIDE,
+                    use_kernel: bool = False) -> TaskConfig:
+    """Algorithm 1: per-task optimal DVFS settings for a whole task set.
+
+    ``allowed`` is ``d - a`` per task.  With ``use_kernel=True`` the batched
+    Pallas kernel (interpret mode on CPU) computes the unconstrained stage.
+
+    Batches are padded to the next power of two so the jitted solver
+    compiles O(log n) distinct shapes over a day-long online simulation
+    instead of one per slot population.
+    """
+    n = int(np.shape(np.asarray(params.p0))[0])
+    n_pad = max(8, 1 << (n - 1).bit_length())
+    if n_pad != n:
+        pad = n_pad - n
+        params = DvfsParams(*(np.concatenate(
+            [np.asarray(f, np.float64), np.full(pad, np.asarray(f)[-1])])
+            for f in params.astuple()))
+        allowed = np.concatenate(
+            [np.asarray(allowed, np.float64),
+             np.full(pad, np.asarray(allowed)[-1])])
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        sol = kernel_ops.dvfs_solve(params, np.asarray(allowed), interval)
+    else:
+        sol = solve_with_deadline(params, allowed, interval)
+    if n_pad != n:
+        sol = DvfsSolution(*(np.asarray(f)[:n] for f in sol))
+        params = params[:n]
+        allowed = np.asarray(allowed)[:n]
+    sol = DvfsSolution(*(np.asarray(f) for f in sol))
+    tmin = np.asarray(dvfs.min_time(params, interval))
+    # The deadline-constrained optimum sits exactly on the t == allowed
+    # boundary; snap the solver's f32 residual there so downstream deadline
+    # checks are exact.
+    allowed_arr = np.broadcast_to(np.asarray(allowed, np.float64), sol.time.shape)
+    t_hat = np.where(sol.deadline_prior & sol.feasible,
+                     np.minimum(sol.time, allowed_arr), sol.time)
+    return TaskConfig(
+        v=sol.v, fc=sol.fc, fm=sol.fm,
+        t_hat=t_hat, p_hat=sol.power, e_hat=sol.power * t_hat,
+        t_min=np.broadcast_to(tmin, sol.time.shape).copy(),
+        deadline_prior=sol.deadline_prior, feasible=sol.feasible,
+        n_deadline_prior=int(np.sum(sol.deadline_prior)),
+    )
+
+
+def readjust(params: DvfsParams, new_allowed: float,
+             interval: ScalingInterval = dvfs.WIDE):
+    """theta-readjustment: re-solve one task with a shrunken time budget.
+
+    Returns ``(v, fc, fm, t, p, e)`` as python floats.
+    """
+    batched = DvfsParams(*(np.asarray([f], dtype=np.float64) for f in params.astuple()))
+    sol = solve_with_deadline(batched, np.asarray([new_allowed]), interval)
+    v, fc, fm, t, p, e = (float(np.asarray(f)[0]) for f in
+                          (sol.v, sol.fc, sol.fm, sol.time, sol.power, sol.energy))
+    if bool(np.asarray(sol.deadline_prior)[0]) and bool(np.asarray(sol.feasible)[0]):
+        t = min(t, float(new_allowed))  # snap the f32 boundary residual
+        e = p * t
+    return v, fc, fm, t, p, e
+
+
+def brute_force_optimum(params: DvfsParams, allowed: float | None = None,
+                        interval: ScalingInterval = dvfs.WIDE, n: int = 160):
+    """Dense-grid reference optimum (tests only; O(n^3) with feasibility mask)."""
+    vs = np.linspace(interval.v_min, interval.v_max, n)
+    fms = np.linspace(interval.fm_min, interval.fm_max, n)
+    best = (np.inf, None)
+    for v in vs:
+        fc_hi = float(dvfs.g1(v))
+        fcs = np.linspace(interval.fc_min, fc_hi, n)
+        fcs = fcs[fcs <= fc_hi + 1e-9]
+        for fc in fcs:
+            t = np.asarray(dvfs.exec_time(params, fc, fms))
+            p = np.asarray(dvfs.power(params, v, fc, fms))
+            e = p * t
+            if allowed is not None:
+                e = np.where(t <= allowed + 1e-9, e, np.inf)
+            i = int(np.argmin(e))
+            if e[i] < best[0]:
+                best = (float(e[i]), (float(v), float(fc), float(fms[i]), float(t[i])))
+    return best

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``dvfs_opt``        — batched single-task DVFS optimum (the scheduler's
+                        per-slot Phi solve; the paper's own hot loop),
+* ``flash_attention`` — blockwise attention (prefill/training),
+* ``ssd_scan``        — Mamba2 SSD chunked scan.
+
+``ops`` holds the jit'd public wrappers (interpret=True on CPU); ``ref``
+holds the pure-jnp oracles used by tests/test_kernels.py.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

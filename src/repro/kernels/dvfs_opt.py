@@ -1,0 +1,143 @@
+"""Pallas TPU kernel for the batched single-task DVFS optimum (paper §4.1).
+
+This is the scheduler's own hot-spot Φ: at every online time slot the
+cluster solves ``argmin E(V, fc, fm)`` for every newly-arrived task
+(Algorithm 1/5) — thousands of independent 2-variable minimizations.  The
+kernel evaluates the energy surface for a block of tasks over a dense
+frequency grid entirely in VMEM and reduces the argmin, fusing what would
+otherwise be a dozen HBM round-trips per task into one.
+
+Layout: tasks are a [n, 8] f32 matrix (p0, γ, c, D, δ, t0, allowed, pad);
+block = (BT=128 tasks, G=128 grid points) — an (8,128)-aligned VPU tile.
+
+Two grid sweeps per task block, matching the paper's case split:
+
+* unconstrained: fc-grid over [fc_min, g1(v_max)]; V = max(v_min, g1⁻¹(fc));
+  fm = closed-form optimum clamped to the box (paper §4.1);
+* deadline boundary: fm-grid; fc from t(fc, fm) = allowed (§4.1 deadline-
+  prior case); +inf energy where infeasible.
+
+The winner per task replicates exactly the decision rule of
+``repro.core.single_task.solve_with_deadline`` (the pure-jnp oracle in
+``ref.py``) up to grid resolution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.dvfs import G1_A, G1_B, G1_C, ScalingInterval, WIDE
+
+BT = 128   # tasks per block
+G = 128    # grid points per sweep
+INF = 1e30
+
+
+def _g1(v):
+    return jnp.sqrt(jnp.maximum(v - G1_A, 0.0) / G1_B) + G1_C
+
+
+def _g1_inv(fc):
+    return G1_B * jnp.square(jnp.maximum(fc - G1_C, 0.0)) + G1_A
+
+
+def _kernel(tasks_ref, out_ref, *, iv: ScalingInterval):
+    t = tasks_ref[...].astype(jnp.float32)               # [BT, 8]
+    p0, gamma, cc = t[:, 0:1], t[:, 1:2], t[:, 2:3]
+    dd, delta, t0 = t[:, 3:4], t[:, 4:5], t[:, 5:6]
+    allowed = t[:, 6:7]
+
+    frac = jax.lax.broadcasted_iota(jnp.float32, (BT, G), 1) / (G - 1)
+
+    def energy_at(v, fc, fm):
+        pw = p0 + gamma * fm + cc * jnp.square(v) * fc
+        tt = dd * (delta / fc + (1.0 - delta) / fm) + t0
+        return pw * tt, pw, tt
+
+    # ---- sweep 1: unconstrained, fc grid on [fc_min, g1(v_max)].
+    fc_max = _g1(jnp.float32(iv.v_max))
+    fc = iv.fc_min + (fc_max - iv.fc_min) * frac         # [BT, G]
+    v = jnp.maximum(iv.v_min, _g1_inv(fc))
+    # closed-form fm (paper §4.1), clamped; gamma == 0 -> fm_max.
+    num = (p0 + cc * jnp.square(v) * fc) * dd * (1.0 - delta)
+    den = gamma * (t0 + dd * delta / fc)
+    fm = jnp.sqrt(num / jnp.maximum(den, 1e-30))
+    fm = jnp.where(gamma <= 0.0, iv.fm_max, fm)
+    fm = jnp.clip(fm, iv.fm_min, iv.fm_max)
+    e_u, _, t_u = energy_at(v, fc, fm)
+    iu = jnp.argmin(e_u, axis=1)                          # [BT]
+    rows = jnp.arange(BT)
+    fc_u = fc[rows, iu]
+    v_u = v[rows, iu]
+    fm_u = fm[rows, iu]
+    e_un = e_u[rows, iu]
+    t_un = t_u[rows, iu]
+
+    # ---- sweep 2: deadline boundary t(fc, fm) = allowed, fm grid.
+    fm2 = iv.fm_min + (iv.fm_max - iv.fm_min) * frac
+    slack = allowed - t0 - dd * (1.0 - delta) / fm2
+    fc_req = dd * delta / jnp.maximum(slack, 1e-30)
+    fc_req = jnp.where(delta <= 0.0, iv.fc_min, fc_req)
+    bad = (slack <= 0.0) & (delta > 0.0)
+    fc2 = jnp.clip(fc_req, iv.fc_min, fc_max)
+    v2 = jnp.maximum(iv.v_min, _g1_inv(fc2))
+    e_d, _, t_d = energy_at(v2, fc2, fm2)
+    e_d = jnp.where(bad | (fc_req > fc_max + 1e-6), INF, e_d)
+    idx = jnp.argmin(e_d, axis=1)
+    fc_d = fc2[rows, idx]
+    v_d = v2[rows, idx]
+    fm_d = fm2[rows, idx]
+    e_dl = e_d[rows, idx]
+    t_dl = jnp.minimum(t_d[rows, idx], allowed[:, 0])
+
+    # ---- decision rule (== solve_with_deadline):
+    # energy-prior if the unconstrained optimum meets the deadline;
+    # infeasible (deadline < t_min) -> run at max speed.
+    energy_prior = t_un <= allowed[:, 0] + 1e-6
+    t_min = (dd * (delta / fc_max + (1.0 - delta) / iv.fm_max) + t0)[:, 0]
+    feasible = allowed[:, 0] >= t_min - 1e-6
+    v_mx = jnp.full((BT,), iv.v_max, jnp.float32)
+    fc_mx = jnp.full((BT,), fc_max, jnp.float32)
+    fm_mx = jnp.full((BT,), iv.fm_max, jnp.float32)
+
+    def pick(unc, con, mx):
+        x = jnp.where(energy_prior, unc, con)
+        return jnp.where(feasible, x, mx)
+
+    vf = pick(v_u, v_d, v_mx)
+    fcf = pick(fc_u, fc_d, fc_mx)
+    fmf = pick(fm_u, fm_d, fm_mx)
+    pw = (p0[:, 0] + gamma[:, 0] * fmf + cc[:, 0] * jnp.square(vf) * fcf)
+    tt = dd[:, 0] * (delta[:, 0] / fcf + (1.0 - delta[:, 0]) / fmf) + t0[:, 0]
+    tt = jnp.where(feasible & ~energy_prior, jnp.minimum(tt, allowed[:, 0]), tt)
+
+    out = jnp.stack([vf, fcf, fmf, tt, pw, pw * tt,
+                     (~energy_prior).astype(jnp.float32),
+                     feasible.astype(jnp.float32)], axis=1)   # [BT, 8]
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interval", "interpret"))
+def dvfs_solve_kernel(tasks: jax.Array, *, interval: ScalingInterval = WIDE,
+                      interpret: bool = False) -> jax.Array:
+    """tasks: [n, 8] f32 (p0, gamma, c, D, delta, t0, allowed, pad) ->
+    [n, 8] (v, fc, fm, t, p, e, deadline_prior, feasible)."""
+    n = tasks.shape[0]
+    n_pad = -(-n // BT) * BT
+    if n_pad != n:
+        pad = jnp.ones((n_pad - n, 8), tasks.dtype)  # benign dummy tasks
+        tasks = jnp.concatenate([tasks, pad], axis=0)
+    kernel = functools.partial(_kernel, iv=interval)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pad // BT,),
+        in_specs=[pl.BlockSpec((BT, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BT, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 8), jnp.float32),
+        interpret=interpret,
+    )(tasks.astype(jnp.float32))
+    return out[:n]

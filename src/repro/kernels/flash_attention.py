@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (prefill/training hot-spot).
+
+Canonical TPU tiling: grid ``(B, H, n_q_blocks, n_kv_blocks)`` with the
+minor-most (kv) axis executed sequentially per core so the running-softmax
+state lives in VMEM scratch across kv steps:
+
+* q block   ``(1, 1, bq, dh)``  — revisited for every kv step,
+* k/v block ``(1, 1, bk, dh)``  — GQA maps q-head h to kv-head ``h // g``
+  in the BlockSpec index map (no materialized head broadcast),
+* scratch   ``m, l [bq]``, ``acc [bq, dh]`` (f32).
+
+Matmul dims are MXU-aligned (bq = bk = 128 defaults, dh padded to 128 by
+the wrapper in ``ops.py``).  Causal masking is done per-block; fully-masked
+blocks short-circuit with ``pl.when`` so they cost no MXU work.
+
+Validated in ``interpret=True`` mode against ``ref.attention_ref`` over
+shape/dtype sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, causal: bool, window: Optional[int],
+            scale: float, n_kv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = iq * bq
+    k_lo = ik * bk
+    # Static-shape block skip test must be dynamic (program ids are traced):
+    # a block is live unless causal-above-diagonal or outside the window.
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + bq - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_lo + bk - 1 >= q_lo - window + 1)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, H, Sq, dh]; k/v: [B, KV, Sk, dh] -> [B, H, Sq, dh].
+
+    ``dh`` should be 128-aligned for the MXU (the ops.py wrapper pads)."""
+    B, H, Sq, dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    g = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = dh ** -0.5
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, causal=causal,
+                               window=window, scale=scale, n_kv=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,73 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU container every kernel runs in ``interpret=True`` mode (the
+kernel body executes as JAX ops — bit-identical control flow to the TPU
+lowering); on a real TPU backend the same calls compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dvfs import DvfsParams, ScalingInterval, WIDE
+from repro.core.single_task import DvfsSolution
+from repro.kernels.dvfs_opt import dvfs_solve_kernel
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_head_dim(x: jax.Array, to: int = 128) -> jax.Array:
+    dh = x.shape[-1]
+    if dh % to == 0:
+        return x
+    pad = -(-dh // to) * to - dh
+    cfgpad = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, cfgpad)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128) -> jax.Array:
+    """MXU-padded flash attention.  q: [B, H, S, dh]; k/v: [B, KV, Sk, dh].
+
+    Pads dh to a multiple of 128 (scores are unaffected because padded
+    columns are zero in both q and k; v padding is sliced off)."""
+    dh = q.shape[-1]
+    qp, kp, vp = (_pad_head_dim(t) for t in (q, k, v))
+    # scale uses the REAL dh: compensate the kernel's padded-dh scale.
+    fix = (qp.shape[-1] / dh) ** 0.5
+    out = _flash(qp * fix, kp, vp, causal=causal, window=window, bq=bq,
+                 bk=bk, interpret=_interpret())
+    return out[..., :dh]
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, chunk: int = 128) -> jax.Array:
+    """SSD chunked scan (no D-skip).  See kernels/ssd_scan.py."""
+    return _ssd(x, dt, a, b, c, chunk=chunk, interpret=_interpret())
+
+
+def dvfs_solve(params: DvfsParams, allowed: np.ndarray,
+               interval: ScalingInterval = WIDE) -> DvfsSolution:
+    """Batched single-task DVFS optimum via the Pallas kernel.
+
+    Drop-in for ``single_task.solve_with_deadline`` (same DvfsSolution
+    contract; used by ``configure_tasks(use_kernel=True)``)."""
+    cols = [np.asarray(f, np.float32) for f in params.astuple()]
+    n = cols[0].shape[0]
+    tasks = np.stack(cols + [np.asarray(allowed, np.float32),
+                             np.zeros(n, np.float32)], axis=1)
+    out = np.asarray(dvfs_solve_kernel(jnp.asarray(tasks), interval=interval,
+                                       interpret=_interpret()))
+    return DvfsSolution(v=out[:, 0], fc=out[:, 1], fm=out[:, 2],
+                        time=out[:, 3], power=out[:, 4], energy=out[:, 5],
+                        deadline_prior=out[:, 6] > 0.5,
+                        feasible=out[:, 7] > 0.5)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dvfs as dvfs_lib
+from repro.core import single_task
+from repro.core.dvfs import DvfsParams, ScalingInterval, WIDE
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """Dense softmax attention.  q: [B, H, S, dh]; k/v: [B, KV, Sk, dh]."""
+    B, H, Sq, dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    g = H // KV
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array) -> jax.Array:
+    """Sequential SSD recurrence (no D-skip), matching ssd_scan's contract."""
+    from repro.models.ssm import ssd_reference
+    y, _ = ssd_reference(x, dt, a, b, c)
+    return y.astype(x.dtype)
+
+
+def dvfs_solve_ref(tasks: np.ndarray,
+                   interval: ScalingInterval = WIDE) -> np.ndarray:
+    """Oracle for dvfs_opt: the production grid+golden solver."""
+    params = DvfsParams(p0=tasks[:, 0], gamma=tasks[:, 1], c=tasks[:, 2],
+                        big_d=tasks[:, 3], delta=tasks[:, 4], t0=tasks[:, 5])
+    sol = single_task.solve_with_deadline(params, tasks[:, 6], interval)
+    t = np.asarray(sol.time)
+    dp = np.asarray(sol.deadline_prior)
+    feas = np.asarray(sol.feasible)
+    t = np.where(dp & feas, np.minimum(t, tasks[:, 6]), t)
+    p = np.asarray(sol.power)
+    return np.stack([np.asarray(sol.v), np.asarray(sol.fc),
+                     np.asarray(sol.fm), t, p, p * t,
+                     dp.astype(np.float32), feas.astype(np.float32)], axis=1)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (train/prefill
+hot-spot of the attention-free cells).
+
+Grid ``(B, H, n_chunks)`` with the chunk axis minor-most (sequential per
+core) so the inter-chunk state ``[P, N]`` lives in VMEM scratch across
+chunk steps — the HBM<->VMEM traffic per chunk is exactly one read of
+(x, dt, B, C) and one write of y; the state never leaves VMEM.
+
+Per chunk (Q tokens, all f32 in VMEM):
+
+    scores = C B^T ⊙ L           (L = exp(segsum(dt*a)), lower-tri)
+    y_diag = scores @ (dt*x)
+    y_off  = (C @ state) ⊙ exp(cum)
+    state  = decay * state + (B ⊙ w)^T @ (dt*x)
+
+MXU shapes: [Q, N] x [N, Q] and [Q, Q] x [Q, P] with Q = 128/256 and
+N = 128, P = 64..128 — all 128-aligned on the lane dim.
+
+Oracle: ``repro.models.ssm.ssd_chunked`` / ``ssd_reference``
+(tests/test_kernels.py sweeps shapes and dtypes in interpret mode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+            q: int, p: int, n: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)              # [Q, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)            # [Q]
+    a = a_ref[0]                                        # scalar (per head)
+    bm = b_ref[0, 0].astype(jnp.float32)                # [Q, N]
+    cm = c_ref[0, 0].astype(jnp.float32)                # [Q, N]
+
+    dA = dt * a                                         # [Q]
+    cum = jnp.cumsum(dA)                                # [Q]
+    xd = x * dt[:, None]                                # dt-weighted input
+
+    # Intra-chunk: (C B^T ⊙ L) xd, L[i,j] = exp(cum_i - cum_j) for i >= j.
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q,Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    ldec = jnp.where(ii >= jj, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    y = jax.lax.dot_general(scores * ldec, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # [Q,P]
+
+    # Off-chunk: contribution of the carried state.
+    cs = jax.lax.dot_general(cm, state_ref[...], (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)      # [Q,P]
+    y = y + cs * jnp.exp(cum)[:, None]
+
+    # State update: state' = exp(cum_last) * state + sum_k w_k B_k xd_k^T.
+    w = jnp.exp(cum[-1] - cum)                          # [Q]
+    upd = jax.lax.dot_general(xd, bm * w[:, None], (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)     # [P,N]
+    state_ref[...] = state_ref[...] * jnp.exp(cum[-1]) + upd
+
+    y_ref[0, 0, 0, :, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """x: [B, S, H, P]; dt: [B, S, H] (softplus'd); a: [H] (negative);
+    b/c: [B, S, N].  Returns y [B, S, H, P] (without the D skip term)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    q = min(chunk, S)
+    assert S % q == 0, (S, q)
+    nc = S // q
+
+    xk = x.transpose(0, 2, 1, 3).reshape(B, H, nc, q, P)
+    dtk = dt.transpose(0, 2, 1).reshape(B, H, nc, q)
+    bk = b.reshape(B, nc, q, N)
+    ck = c.reshape(B, nc, q, N)
+
+    kernel = functools.partial(_kernel, q=q, p=P, n=N, n_chunks=nc)
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, P), lambda bb, h, cc: (bb, h, cc, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda bb, h, cc: (bb, h, cc, 0)),
+            pl.BlockSpec((1,), lambda bb, h, cc: (h,)),
+            pl.BlockSpec((1, 1, q, N), lambda bb, h, cc: (bb, cc, 0, 0)),
+            pl.BlockSpec((1, 1, q, N), lambda bb, h, cc: (bb, cc, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, q, P),
+                               lambda bb, h, cc: (bb, h, cc, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, q, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xk, dtk, a.astype(jnp.float32), bk, ck)
+    return y.reshape(B, H, S, P).transpose(0, 2, 1, 3)

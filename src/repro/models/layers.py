@@ -1,0 +1,210 @@
+"""Shared building blocks: parameter builder, norms, RoPE, MLPs.
+
+Parameters are plain nested dicts of ``jnp`` arrays; :class:`ParamBuilder`
+creates them *and* records a parallel tree of logical-axes tuples, so the
+launcher can derive shardings without a second source of truth.  All forward
+code is pure functions over the params dict - vmappable, scannable, and
+`jax.eval_shape`-able (the dry-run never allocates real parameters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import partition
+
+Params = Dict[str, Any]
+
+PARAM_DTYPE = jnp.float32     # master weights
+COMPUTE_DTYPE = jnp.bfloat16  # activations / matmul inputs
+
+
+class ParamBuilder:
+    """Creates parameters and records their logical axes.
+
+    >>> b = ParamBuilder(jax.random.key(0))
+    >>> w = b.param("w", (64, 128), ("embed", "ff"))
+    >>> b.axes["w"] == ("embed", "ff")
+    """
+
+    def __init__(self, key: jax.Array, prefix: str = ""):
+        self._key = key
+        self.prefix = prefix
+        self.axes: Dict[str, Any] = {}
+
+    def next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, name: str, shape: Tuple[int, ...], axes: Tuple,
+              init: str = "normal", scale: float = 0.02,
+              dtype=PARAM_DTYPE) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        self.axes[name] = tuple(axes)
+        if init == "normal":
+            return (jax.random.normal(self.next_key(), shape, dtype) * scale)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "uniform":  # U(scale_lo, scale_hi) packed into `scale`
+            return jax.random.uniform(self.next_key(), shape, dtype,
+                                      minval=0.0, maxval=scale)
+        raise ValueError(init)
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(self.next_key())
+        sub._parent, sub._name = self, name  # type: ignore[attr-defined]
+        return sub
+
+    def adopt(self, name: str, sub: "ParamBuilder", params: Params) -> Params:
+        self.axes[name] = sub.axes
+        return params
+
+
+def init_stacked(key: jax.Array, n: int, fn):
+    """Initialize ``n`` identical layers stacked on a leading axis via vmap.
+
+    ``fn(builder) -> params``; returns ``(params, axes)`` where every array
+    gains a leading "layers" axis and every axes tuple a leading "layers"
+    entry.  The stacked layout is what lets the model run the layer stack as
+    one ``lax.scan`` - a single HLO while-body regardless of depth.
+    """
+    probe = ParamBuilder(jax.random.key(0))
+    fn(probe)  # record axes once
+
+    def one(k):
+        return fn(ParamBuilder(k))
+
+    params = jax.vmap(one)(jax.random.split(key, n))
+    axes = jax.tree.map(lambda a: ("layers",) + a, probe.axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding.
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # [head_dim // 2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Fixed sinusoidal table (whisper frontend positions)."""
+    pos = np.arange(n)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    angle = pos / np.power(10_000.0, dim / d)
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(b: ParamBuilder, d: int, ff: int, mlp_type: str) -> Params:
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi": b.param("wi", (d, 2 * ff), ("embed", "ff"), scale=0.02),
+            "wo": b.param("wo", (ff, d), ("ff", "embed"), scale=0.02),
+        }
+    if mlp_type in ("squared_relu", "gelu"):
+        return {
+            "wi": b.param("wi", (d, ff), ("embed", "ff"), scale=0.02),
+            "wo": b.param("wo", (ff, d), ("ff", "embed"), scale=0.02),
+        }
+    raise ValueError(mlp_type)
+
+
+def mlp(params: Params, x: jax.Array, mlp_type: str) -> jax.Array:
+    wi = partition.wcast(params["wi"], COMPUTE_DTYPE, ("embed", "ff"))
+    wo = partition.wcast(params["wo"], COMPUTE_DTYPE, ("ff", "embed"))
+    h = x @ wi
+    if mlp_type in ("swiglu", "geglu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu if mlp_type == "swiglu" else jax.nn.gelu
+        h = act(gate.astype(jnp.float32)).astype(COMPUTE_DTYPE) * up
+    elif mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    h = partition.constrain(h, ("batch", "seq", "ff"))
+    return h @ wo
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with vocab-parallel cross-entropy.
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(table.astype(COMPUTE_DTYPE), tokens, axis=0)
+    return partition.constrain(out, ("batch", "seq", "act_embed"))
+
+
+def unembed(x: jax.Array, head: jax.Array) -> jax.Array:
+    """Logits in f32; vocab dim carries the "vocab" logical axis (TP)."""
+    logits = x @ head.astype(COMPUTE_DTYPE)
+    logits = partition.constrain(logits.astype(jnp.float32),
+                                 ("batch", "seq", "vocab"))
+    return logits
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE over valid positions.  ``logits`` may be sharded on
+    the vocab dim - the log-softmax reductions stay in the global view so the
+    partitioner inserts the (small) cross-shard reductions."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

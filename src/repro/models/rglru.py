@@ -1,0 +1,173 @@
+"""RG-LRU recurrent blocks (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence is a gated diagonal linear RNN::
+
+    r_t = sigmoid(W_a x_t + b_a)           (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)           (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t) (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+Being *linear* in ``h``, it maps onto ``jax.lax.associative_scan`` — the
+parallel-prefix formulation is what keeps the 500k-token hybrid cell
+sub-quadratic.  Decode is a single fused elementwise update (O(1) state).
+
+The full recurrent block (as in Griffin) is two branches: a GeLU gate
+branch, and a (linear -> causal conv1d -> RG-LRU) branch, merged
+multiplicatively and projected back to ``d_model``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import partition
+from repro.models.config import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, ParamBuilder, Params
+
+C_FACTOR = 8.0
+
+
+def init_rglru_block(b: ParamBuilder, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    r = cfg.rnn_width_
+    return {
+        "w_gate": b.param("w_gate", (d, r), ("embed", "inner"), scale=0.02),
+        "w_in": b.param("w_in", (d, r), ("embed", "inner"), scale=0.02),
+        "conv_w": b.param("conv_w", (cfg.conv_width, r), (None, "inner"),
+                          scale=0.02),
+        "conv_b": b.param("conv_b", (r,), ("inner",), init="zeros"),
+        # RG-LRU gates (first dim replicated: both dims on the model axis
+        # would double-assign the mesh axis)
+        "wa": b.param("wa", (r, r), (None, "inner"), scale=0.02),
+        "ba": b.param("ba", (r,), ("inner",), init="zeros"),
+        "wx": b.param("wx", (r, r), (None, "inner"), scale=0.02),
+        "bx": b.param("bx", (r,), ("inner",), init="zeros"),
+        "lam": b.param("lam", (r,), ("inner",), init="uniform", scale=1.0),
+        "w_out": b.param("w_out", (r, d), ("inner", "embed"), scale=0.02),
+    }
+
+
+def _gates(params: Params, x: jax.Array):
+    """(a_t, beta_t * i_t ⊙ x_t) for the linear recurrence, in f32."""
+    xf = x.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(xf @ params["wa"].astype(jnp.float32)
+                            + params["ba"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(xf @ params["wx"].astype(jnp.float32)
+                            + params["bx"].astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, beta * i_gate * xf
+
+
+def rglru_scan(params: Params, x: jax.Array,
+               h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Run the RG-LRU over a sequence with a parallel prefix scan.
+
+    x: [B, S, r] -> (h [B, S, r], h_last [B, r])."""
+    a, b_term = _gates(params, x)
+
+    if h0 is not None:
+        # Fold the initial state in as a virtual step 0 with a=1 gain.
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b_term = jnp.concatenate([h0.astype(jnp.float32)[:, None], b_term], 1)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(params: Params, x: jax.Array, h_prev: jax.Array) -> jax.Array:
+    """One decode step.  x: [B, r]; h_prev: [B, r] -> h [B, r]."""
+    a, b_term = _gates(params, x[:, None, :])
+    return (a[:, 0] * h_prev.astype(jnp.float32) + b_term[:, 0])
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 state: Optional[jax.Array] = None) -> jax.Array:
+    W = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(x_pad[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + bias
+
+
+def recurrent_block(params: Params, x: jax.Array, cfg: ModelConfig, *,
+                    state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    return_state: bool = False):
+    """Griffin recurrent block.  x: [B, S, d].
+
+    ``state``: (conv_state [B, W-1, r], h [B, r])."""
+    conv_state, h0 = state if state is not None else (None, None)
+    gate = jax.nn.gelu((x @ partition.wcast(params["w_gate"], COMPUTE_DTYPE,
+                                            ("embed", "inner")))
+                       .astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    u = x @ partition.wcast(params["w_in"], COMPUTE_DTYPE,
+                            ("embed", "inner"))
+    u = partition.constrain(u, ("batch", "seq", "inner"))
+
+    new_conv = None
+    if return_state:
+        W = cfg.conv_width
+        hist = u if conv_state is None else jnp.concatenate(
+            [conv_state.astype(u.dtype), u], axis=1)
+        if hist.shape[1] < W - 1:
+            hist = jnp.pad(hist, ((0, 0), (W - 1 - hist.shape[1], 0), (0, 0)))
+        new_conv = hist[:, -(W - 1):, :]
+    u = _causal_conv(u, params["conv_w"].astype(COMPUTE_DTYPE),
+                     params["conv_b"].astype(COMPUTE_DTYPE), conv_state)
+
+    h, h_last = rglru_scan(params, u, h0)
+    y = (h * gate) @ partition.wcast(params["w_out"], COMPUTE_DTYPE,
+                                     ("inner", "embed"))
+    if return_state:
+        return y, (new_conv.astype(COMPUTE_DTYPE), h_last)
+    return y
+
+
+def recurrent_block_decode(params: Params, x: jax.Array, cfg: ModelConfig,
+                           state: Tuple[jax.Array, jax.Array]):
+    """One-token decode.  x: [B, d] -> (y [B, d], new state)."""
+    conv_state, h_prev = state
+    gate = jax.nn.gelu((x @ params["w_gate"].astype(COMPUTE_DTYPE))
+                       .astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    u = x @ params["w_in"].astype(COMPUTE_DTYPE)
+    hist = jnp.concatenate([conv_state.astype(u.dtype), u[:, None, :]], 1)
+    new_conv = hist[:, 1:, :]
+    w = params["conv_w"].astype(COMPUTE_DTYPE)
+    u = jnp.sum(hist * w[None], axis=1) + params["conv_b"].astype(COMPUTE_DTYPE)
+    h = rglru_step(params, u, h_prev)
+    y = (h.astype(COMPUTE_DTYPE) * gate) @ params["w_out"].astype(COMPUTE_DTYPE)
+    return y, (new_conv, h)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    r = cfg.rnn_width_
+    conv = jnp.zeros((batch, cfg.conv_width - 1, r), COMPUTE_DTYPE)
+    h = jnp.zeros((batch, r), jnp.float32)
+    axes = (("batch", None, "inner"), ("batch", "inner"))
+    return (conv, h), axes
+
+
+def rglru_reference(params: Params, x: jax.Array,
+                    h0: Optional[jax.Array] = None) -> jax.Array:
+    """Sequential-scan oracle for :func:`rglru_scan` (tests)."""
+    a, b_term = _gates(params, x)
+    B, S, r = x.shape
+    h = jnp.zeros((B, r), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    out = []
+    for t in range(S):
+        h = a[:, t] * h + b_term[:, t]
+        out.append(h)
+    return jnp.stack(out, axis=1).astype(x.dtype)

@@ -1,0 +1,257 @@
+"""Mamba2 SSD (state-space duality) blocks: chunked train/prefill scan and
+O(1)-state decode (arXiv:2405.21060).
+
+The SSD layer computes, per head h with state size N and head dim P::
+
+    s_t = exp(dt_t * A_h) * s_{t-1} + dt_t * B_t x_t^T      (s in R^{P x N})
+    y_t = C_t s_t + D_h x_t
+
+Training/prefill uses the chunked dual form: split the sequence into chunks
+of Q tokens; inside a chunk the contribution is a masked "attention"
+``(C B^T ⊙ L)`` with the decay matrix ``L[i,j] = exp(cum_i - cum_j)``;
+across chunks a short ``lax.scan`` carries the [H, P, N] chunk states.  The
+intra-chunk einsums are MXU-shaped (Q x Q x N / Q x N x P) — they are the
+Pallas ``ssd_scan`` kernel's oracle (``repro/kernels/ref.py``).
+
+Decode carries ``(conv_state, ssm_state)`` per layer — constant memory in
+sequence length, which is what makes the ``long_500k`` cell runnable.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import partition
+from repro.models.config import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, ParamBuilder, Params, rms_norm
+
+
+def init_mamba2(b: ParamBuilder, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    conv_dim = di + 2 * n  # conv over (x, B, C)
+    return {
+        # in_proj packs (z, x, B, C, dt)
+        "in_proj": b.param("in_proj", (d, 2 * di + 2 * n + h),
+                           ("embed", "inner"), scale=0.02),
+        "conv_w": b.param("conv_w", (cfg.conv_width, conv_dim),
+                          (None, "inner"), scale=0.02),
+        "conv_b": b.param("conv_b", (conv_dim,), ("inner",), init="zeros"),
+        "a_log": b.param("a_log", (h,), (None,), init="uniform", scale=1.0),
+        "d_skip": b.param("d_skip", (h,), (None,), init="ones"),
+        "dt_bias": b.param("dt_bias", (h,), (None,), init="zeros"),
+        "norm": b.param("norm", (di,), ("inner",), init="zeros"),
+        "out_proj": b.param("out_proj", (di, d), ("inner", "embed"), scale=0.02),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv.  x: [B, S, Cdim]; w: [W, Cdim].
+
+    ``state``: [B, W-1, Cdim] trailing context (decode); None => zero-pad."""
+    W = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(x_pad[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def segsum(dA: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise decay exponents.
+
+    dA: [..., Q] -> L_exp [..., Q, Q] with L_exp[i, j] = sum_{j < m <= i} dA_m
+    for i >= j, -inf above the diagonal."""
+    q = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b_in: jax.Array,
+                c_in: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H] (already softplus'd);
+    a: [H] (negative); b_in/c_in: [B, S, N] (single group, broadcast over H).
+    Returns (y [B, S, H, P], final_state [B, H, P, N])."""
+    B, S, H, P = x.shape
+    N = b_in.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    NC = S // Q
+
+    cd = x.dtype  # matmul dtype follows the activations (bf16 in prod)
+    dA = (dt * a).astype(jnp.float32)                          # [B, S, H]
+    xd = (x * dt[..., None]).astype(cd)                        # dt-weighted input
+
+    xc = xd.reshape(B, NC, Q, H, P)
+    dAc = dA.reshape(B, NC, Q, H)
+    bc = b_in.reshape(B, NC, Q, N).astype(cd)
+    cc = c_in.reshape(B, NC, Q, N).astype(cd)
+
+    # --- intra-chunk (diagonal blocks): (C B^T ⊙ L) X
+    L = jnp.exp(segsum(dAc.transpose(0, 1, 3, 2)))             # [B,NC,H,Q,Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc,
+                        preferred_element_type=jnp.float32)    # [B,NC,Q,Q]
+    m = scores[:, :, None, :, :] * L                           # [B,NC,H,Q,Q]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", m.astype(cd), xc,
+                        preferred_element_type=jnp.float32)
+
+    # --- chunk states: S_c_local = sum_k exp(cum_last - cum_k) B_k xd_k^T
+    cum = jnp.cumsum(dAc, axis=2)                              # [B,NC,Q,H]
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)            # [B,NC,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc,
+                        decay_states.astype(cd), xc,
+                        preferred_element_type=jnp.float32)    # [B,NC,H,P,N]
+
+    # --- inter-chunk recurrence.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # [B,NC,H]
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # [B,NC,H,P,N]
+
+    # --- state -> output within each chunk.
+    state_decay = jnp.exp(cum)                                 # [B,NC,Q,H]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc,
+                       prev_states.astype(cd),
+                       state_decay.astype(cd),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_reference(x, dt, a, b_in, c_in) -> Tuple[jax.Array, jax.Array]:
+    """Token-by-token recurrence oracle (tests): O(S) sequential scan."""
+    B, S, H, P = x.shape
+    N = b_in.shape[-1]
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * a)[..., None, None]              # [B,H,1,1]
+        s = s * decay + jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          b_in.astype(jnp.float32).transpose(1, 0, 2),
+          c_in.astype(jnp.float32).transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def mamba2_block(params: Params, x: jax.Array, cfg: ModelConfig, *,
+                 state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                 return_state: bool = False):
+    """Full mamba2 block.  x: [B, S, d].
+
+    ``state``: (conv_state [B, W-1, conv_dim], ssm_state [B, H, P, N]) for
+    decode continuation.  Returns y or (y, new_state)."""
+    B, S, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ partition.wcast(params["in_proj"], COMPUTE_DTYPE,
+                                 ("embed", "inner"))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+
+    conv_state, ssm_state = state if state is not None else (None, None)
+    new_conv = None
+    if return_state:
+        W = cfg.conv_width
+        hist = xbc if conv_state is None else jnp.concatenate(
+            [conv_state.astype(xbc.dtype), xbc], axis=1)
+        new_conv = hist[:, -(W - 1):, :]
+        if hist.shape[1] < W - 1:  # left-pad short prefills
+            new_conv = jnp.pad(hist, ((0, 0), (W - 1 - hist.shape[1], 0), (0, 0)))
+    xbc = _causal_conv(xbc, params["conv_w"].astype(COMPUTE_DTYPE),
+                       params["conv_b"].astype(COMPUTE_DTYPE), conv_state)
+
+    xs, b_in, c_in = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = partition.constrain(xs, ("batch", "seq", "inner"))
+    xs = xs.reshape(B, S, h, p)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    y, final_state = ssd_chunked(xs, dt, a, b_in, c_in, cfg.ssm_chunk,
+                                 init_state=ssm_state)
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, S, di).astype(COMPUTE_DTYPE)
+
+    # gated RMSNorm then out projection
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE),
+                 params["norm"], cfg.norm_eps)
+    out = y @ partition.wcast(params["out_proj"], COMPUTE_DTYPE,
+                              ("inner", "embed"))
+    if return_state:
+        return out, (new_conv.astype(COMPUTE_DTYPE), final_state)
+    return out
+
+
+def mamba2_decode(params: Params, x: jax.Array, cfg: ModelConfig,
+                  state: Tuple[jax.Array, jax.Array]):
+    """Single-token decode.  x: [B, d]; state as in :func:`mamba2_block`.
+
+    Fully recurrent: O(1) in the sequence length."""
+    B, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    conv_state, ssm_state = state
+    zxbcdt = x @ params["in_proj"].astype(COMPUTE_DTYPE)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+
+    # conv ring update
+    hist = jnp.concatenate([conv_state.astype(xbc.dtype), xbc[:, None, :]], 1)
+    new_conv = hist[:, 1:, :]
+    w = params["conv_w"].astype(COMPUTE_DTYPE)
+    conv_out = jnp.sum(hist * w[None], axis=1) + params["conv_b"].astype(COMPUTE_DTYPE)
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+
+    xs, b_in, c_in = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = xs.reshape(B, h, p)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))     # [B, h]
+
+    decay = jnp.exp(dt * a)[..., None, None]                          # [B,h,1,1]
+    upd = jnp.einsum("bhp,bn->bhpn", xs.astype(jnp.float32) * dt[..., None],
+                     b_in.astype(jnp.float32))
+    new_ssm = ssm_state * decay + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, c_in.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, di).astype(COMPUTE_DTYPE)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE),
+                 params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(COMPUTE_DTYPE)
+    return out, (new_conv, new_ssm)
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int):
+    """Zeroed decode state (+ logical axes)."""
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.conv_width - 1, conv_dim), COMPUTE_DTYPE)
+    ssm = jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32)
+    axes = (("batch", None, "inner"), ("batch", None, None, None))
+    return (conv, ssm), axes

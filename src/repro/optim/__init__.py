@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW, OptState, cosine_schedule
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     CompressionState)
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "compress_int8",
+           "decompress_int8", "CompressionState"]

@@ -1,0 +1,92 @@
+"""AdamW with global-norm clipping and a warmup+cosine schedule.
+
+Self-contained (no optax in this container).  Optimizer states are f32 and
+inherit the parameter shardings — with the fsdp rule table every moment
+tensor is fully sharded over both mesh axes (ZeRO-style), so optimizer
+memory is ``2 * params / n_chips`` per chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array  # int32 step counter
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    """lr(step): linear warmup then cosine decay to ``min_frac * base_lr``."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Any = 3e-4      # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(m=zeros,
+                        v=jax.tree.map(jnp.copy, zeros),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, metrics)."""
+        count = state.count + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = (self.learning_rate(count) if callable(self.learning_rate)
+              else jnp.asarray(self.learning_rate, jnp.float32))
+
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** c
+        bc2 = 1.0 - self.b2 ** c
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_p = treedef.flatten_up_to(params)
+        new = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_m = treedef.unflatten([x[0] for x in new])
+        new_v = treedef.unflatten([x[1] for x in new])
+        new_p = treedef.unflatten([x[2] for x in new])
+        return new_p, OptState(new_m, new_v, count), {
+            "grad_norm": gnorm, "lr": lr}

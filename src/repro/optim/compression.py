@@ -1,0 +1,54 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for the DP gradient reduction).
+
+Per-tensor symmetric int8 quantization; the quantization residual is kept
+in an error-feedback accumulator and added back before the next step's
+quantization, which provably preserves SGD convergence.  Used by the
+trainer's optional ``compress_grads`` path: gradients are quantized
+*before* the data-parallel reduction (4x fewer bytes on the wire) and
+dequantized after.  Off by default; measured in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any  # error-feedback accumulator, same tree as grads (f32)
+
+
+def init_compression(grads_like) -> CompressionState:
+    return CompressionState(error=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8.  Returns (q int8, scale f32 scalar)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, state: CompressionState):
+    """Quantize a gradient tree with error feedback.
+
+    Returns (quantized tree of (q, scale), new state).  The caller reduces
+    the quantized payload (psum of int32-accumulated int8 values or
+    all-gather of q) and calls :func:`decompress_tree`."""
+    compensated = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                               grads, state.error)
+    qs = jax.tree.map(compress_int8, compensated,
+                      is_leaf=lambda x: isinstance(x, jax.Array))
+    deq = jax.tree.map(lambda qs_: decompress_int8(*qs_), qs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda c, d: c - d, compensated, deq)
+    return qs, deq, CompressionState(error=new_err)

@@ -1,0 +1,12 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Initialize the jax backend BEFORE any test module import: importing
+# repro.launch.dryrun sets XLA_FLAGS=--xla_force_host_platform_device_count
+# =512 (by design — its first two lines), which must not leak into the
+# test process's backend.  Backend flags are read exactly once, here.
+import jax  # noqa: E402
+
+jax.devices()

@@ -1,0 +1,104 @@
+"""Unit tests for the paper's DVFS power/performance/energy models (Eq 1-4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import dvfs
+from repro.core.dvfs import DvfsParams, WIDE, NARROW
+
+
+def mk(p0=100.0, gamma=50.0, c=150.0, big_d=25.0, delta=0.5, t0=5.0):
+    return DvfsParams(p0=p0, gamma=gamma, c=c, big_d=big_d, delta=delta, t0=t0)
+
+
+def test_g1_sublinear_and_inverse():
+    v = np.linspace(0.5, 1.24, 40)
+    f = np.asarray(dvfs.g1(v))
+    assert np.all(np.diff(f) > 0), "g1 must be increasing"
+    # sublinear: slope decreasing
+    slopes = np.diff(f) / np.diff(v)
+    assert np.all(np.diff(slopes) < 1e-9)
+    # inverse identity on the feasible branch
+    vv = np.asarray(dvfs.g1_inv(f))
+    np.testing.assert_allclose(vv, v, atol=1e-6)
+
+
+def test_power_time_energy_identities():
+    p = mk()
+    pw = float(dvfs.power(p, 1.0, 1.0, 1.0))
+    assert pw == pytest.approx(100 + 50 + 150)
+    t = float(dvfs.exec_time(p, 1.0, 1.0))
+    assert t == pytest.approx(25.0 + 5.0)
+    e = float(dvfs.energy(p, 1.0, 1.0, 1.0))
+    assert e == pytest.approx(pw * t)
+    # default helpers agree
+    assert float(p.default_power()) == pytest.approx(pw)
+    assert float(p.default_time()) == pytest.approx(t)
+
+
+def test_time_nonlinear_in_frequencies():
+    """The paper's central modeling point: t is NOT ~ 1/f alone; it splits
+    between core and memory sensitivity via delta."""
+    p_core = mk(delta=1.0)
+    p_mem = mk(delta=0.0)
+    # core-bound: memory frequency has no effect
+    t1 = float(dvfs.exec_time(p_core, 0.8, 0.5))
+    t2 = float(dvfs.exec_time(p_core, 0.8, 1.2))
+    assert t1 == pytest.approx(t2)
+    # memory-bound: core frequency has no effect
+    t1 = float(dvfs.exec_time(p_mem, 0.5, 0.8))
+    t2 = float(dvfs.exec_time(p_mem, 1.0, 0.8))
+    assert t1 == pytest.approx(t2)
+
+
+def test_energy_nonmonotonic_in_fm():
+    """E(fm) decreases then increases for a memory-sensitive task => a
+    strictly interior optimum exists (what distinguishes the paper's model
+    from monotonic CPU models)."""
+    p = mk(gamma=150.0, c=50.0, delta=0.5, t0=10.0)
+    fms = np.linspace(WIDE.fm_min, WIDE.fm_max, 101)
+    e = np.asarray(dvfs.energy(p, 1.0, 1.0, fms))
+    imin = int(np.argmin(e))
+    assert 0 < imin < 100, "optimum should be interior"
+    assert e[0] > e[imin] and e[-1] > e[imin]
+
+
+def test_optimal_fm_closed_form_matches_grid():
+    p = mk(delta=0.3)
+    f_star = float(dvfs.optimal_fm(p, 1.0, 1.0, WIDE))
+    fms = np.linspace(WIDE.fm_min, WIDE.fm_max, 20001)
+    e = np.asarray(dvfs.energy(p, 1.0, 1.0, fms))
+    f_grid = float(fms[np.argmin(e)])
+    assert f_star == pytest.approx(f_grid, abs=2e-4)
+
+
+def test_optimal_fm_gamma_zero_prefers_max():
+    p = mk(gamma=0.0, delta=0.3)
+    assert float(dvfs.optimal_fm(p, 1.0, 1.0, WIDE)) == pytest.approx(
+        WIDE.fm_max)
+
+
+def test_theorem1_energy_increasing_in_voltage():
+    """dE/dV > 0 for fixed (fc, fm) — the optimum sits on fc = g1(V)."""
+    p = mk()
+    vs = np.linspace(0.6, 1.2, 50)
+    e = np.asarray(dvfs.energy(p, vs, 0.7, 1.0))
+    assert np.all(np.diff(e) > 0)
+
+
+def test_interval_clamp():
+    v, fc, fm = WIDE.clamp(2.0, 2.0, 2.0)
+    assert float(v) == pytest.approx(WIDE.v_max)
+    assert float(fc) == pytest.approx(dvfs.g1_float(WIDE.v_max))
+    assert float(fm) == pytest.approx(WIDE.fm_max)
+    # the narrow interval is a subset on the low side (fc_min/fm_min higher)
+    assert NARROW.fc_min > WIDE.fc_min and NARROW.fm_min > WIDE.fm_min
+
+
+def test_tpu_task_params_roundtrip():
+    p = dvfs.tpu_task_params(duration_s=120.0, delta=0.7, t0_frac=0.1)
+    assert float(p.default_time()) == pytest.approx(120.0)
+    assert float(p.delta) == pytest.approx(0.7)
+    # power split sums to the chip envelope at the default point
+    assert float(p.default_power()) == pytest.approx(
+        dvfs.TPU_V5E_CHIP["p_peak"])

@@ -1,0 +1,123 @@
+"""Per-kernel shape/dtype sweeps, assert_allclose vs the ref.py oracles
+(interpret mode executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tasks as tasklib
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(42)
+
+
+@pytest.mark.parametrize("B,H,KV,S,dh", [
+    (1, 2, 2, 128, 64),
+    (2, 4, 2, 256, 64),
+    (1, 8, 8, 384, 128),
+    (2, 4, 1, 256, 80),     # MQA + non-128 head_dim (pad path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, H, KV, S, dh, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, hash((B, H, S, dh)) %
+                                             2**31), 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, dh), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding_window(window):
+    B, H, KV, S, dh = 1, 4, 2, 256, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, dh), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    exp = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-3)
+
+
+def test_flash_attention_noncausal():
+    B, H, KV, S, dh = 2, 2, 2, 128, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, dh), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False)
+    exp = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-3)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 128, 2, 64, 128, 64),
+    (2, 256, 4, 64, 128, 128),
+    (1, 256, 2, 128, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, S + P), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b = (jax.random.normal(ks[3], (B, S, N)) * 0.3).astype(dtype)
+    c = (jax.random.normal(ks[4], (B, S, N)) * 0.3).astype(dtype)
+    y = ops.ssd_scan(x, dt, a, b, c, chunk=chunk)
+    exp = ref.ssd_ref(x, dt, a, b, c)
+    scale = float(jnp.max(jnp.abs(exp.astype(jnp.float32)))) + 1e-6
+    tol = 2e-3 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32) / scale,
+                               np.asarray(exp, np.float32) / scale,
+                               atol=tol)
+
+
+def test_ssd_matches_model_chunked_path():
+    """Kernel vs the model's production jnp chunked implementation."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 2, 256, 4, 64, 64
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    c = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    y_kernel = ops.ssd_scan(x, dt, a, b, c, chunk=128)
+    y_model, _ = ssd_chunked(x, dt, a, b, c, chunk=128)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               atol=5e-3)
+
+
+def test_dvfs_kernel_full_library():
+    lib = tasklib.generate_offline(0.08, seed=9)
+    allowed = lib.deadline - lib.arrival
+    sol = ops.dvfs_solve(lib.params, allowed)
+    tasks_mat = np.stack(
+        [np.asarray(f, np.float32) for f in lib.params.astuple()]
+        + [np.asarray(allowed, np.float32),
+           np.zeros(len(lib), np.float32)], axis=1)
+    expect = ref.dvfs_solve_ref(tasks_mat)
+    rel = np.abs(sol.energy - expect[:, 5]) / expect[:, 5]
+    assert float(np.max(rel)) < 1e-2
+    assert float(np.mean(sol.deadline_prior == (expect[:, 6] > .5))) > 0.97
+    # feasible solutions respect the deadline
+    ok = sol.feasible
+    assert np.all(sol.time[ok] <= np.asarray(allowed)[ok] * (1 + 1e-4))
+
+
+def test_dvfs_kernel_through_scheduler():
+    """configure_tasks(use_kernel=True) plugs the Pallas solver into
+    Algorithm 1 and must produce a near-identical schedule."""
+    from repro.core import scheduling
+    ts = tasklib.generate_offline(0.05, seed=13)
+    r_ref = scheduling.schedule_offline(ts, l=2, algorithm="edl",
+                                        use_kernel=False)
+    r_ker = scheduling.schedule_offline(ts, l=2, algorithm="edl",
+                                        use_kernel=True)
+    assert r_ker.violations == 0
+    assert r_ker.e_total == pytest.approx(r_ref.e_total, rel=2e-3)

@@ -1,0 +1,168 @@
+"""Partitioning rules, collective parsing, and dry-run unit logic (the
+512-device compiles themselves run via launch/dryrun.py, not pytest)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import partition
+from repro.configs import registry
+from repro.launch import dryrun
+
+
+# -- partition -------------------------------------------------------------------
+
+
+def test_is_axes_leaf_predicate():
+    assert partition.is_axes(("embed", "vocab"))
+    assert partition.is_axes((None, "model"))
+    assert partition.is_axes(())
+    assert not partition.is_axes(({"a": 1},))
+    from repro.train.trainer import TrainState
+    assert not partition.is_axes(TrainState(params=1, opt=2, step=3))
+
+
+def test_batch_axes_divisibility():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    # with a (1,1) mesh everything divides
+    assert partition.batch_axes_for(mesh, 8) == "data"
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    assert partition.batch_axes_for(FakeMesh(), 256) == ("pod", "data")
+    assert partition.batch_axes_for(FakeMesh(), 16) == "pod"  # 16 % 32 != 0
+    assert partition.batch_axes_for(FakeMesh(), 1) is None
+
+
+def test_constrain_noop_without_rules():
+    x = jnp.zeros((2, 3))
+    y = partition.constrain(x, ("batch", None))
+    assert y is x
+
+
+def test_rules_spec_lookup():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    rules = partition.fsdp_rules(mesh, 8)
+    spec = rules.spec(("embed", "ff"))
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    assert rules.spec(()) == jax.sharding.PartitionSpec()
+
+
+# -- registry / cells --------------------------------------------------------------
+
+
+def test_cell_enumeration_counts():
+    cells = registry.list_cells()
+    # 10 archs x 4 shapes - 7 long_500k skips = 33
+    assert len(cells) == 33
+    skipped = [(a, s) for a in registry.ARCHS for s in registry.SHAPES
+               if registry.cell_skip_reason(a, s)]
+    assert len(skipped) == 7
+    for a, s in skipped:
+        assert s == "long_500k"
+
+
+def test_input_specs_shapes():
+    s = registry.input_specs("qwen2-72b", "train_4k")
+    assert s["tokens"].shape == (256, 4096)
+    s = registry.input_specs("internvl2-2b", "prefill_32k")
+    assert s["patch_embeds"].shape == (32, 256, 2048)
+    s = registry.input_specs("whisper-base", "train_4k")
+    assert s["frames"].shape == (256, 1500, 512)
+    s = registry.input_specs("mamba2-370m", "decode_32k")
+    assert s["token"].shape == (128,)
+
+
+def test_padded_vocab():
+    assert registry.get_config("whisper-base").padded_vocab % 256 == 0
+    assert registry.get_config("qwen2-72b").padded_vocab == 152064  # exact
+
+
+# -- collective parsing -------------------------------------------------------------
+
+
+HLO_SAMPLE = """
+  %ar = f32[1024,512]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%sum
+  %ag = bf16[64,4096]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(%z), replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %aa = f32[16,16]{1,0} all-to-all(%v), replica_groups=[4,4]<=[16]
+  %done = f32[4,4]{1,0} add(%a, %b)
+"""
+
+
+def test_parse_collectives_ring_model():
+    out = dryrun.parse_collectives(HLO_SAMPLE)
+    assert out["n_collectives"] == 5
+    per = out["per_op_operand_bytes"]
+    assert per["all-reduce"] == 1024 * 512 * 4
+    assert per["all-gather"] == 64 * 4096 * 2 / 4        # operand = shard
+    assert per["reduce-scatter"] == 8 * 128 * 4 * 8      # operand = full
+    assert per["collective-permute"] == 32 * 32 * 2
+    assert per["all-to-all"] == 16 * 16 * 4
+    # ring wire bytes: all-reduce 2X(n-1)/n with n=16
+    expect_ar = 2 * 1024 * 512 * 4 * 15 / 16
+    assert out["ring_wire_bytes"] >= expect_ar
+
+
+def test_choose_microbatches_policy():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    cfg = registry.get_config("qwen2-72b")
+    spec = registry.SHAPES["train_4k"]
+    m = dryrun.choose_microbatches(cfg, spec, FakeMesh())
+    assert m >= 8  # the 80-layer residual stash needs accumulation
+    small = registry.get_config("whisper-base")
+    assert dryrun.choose_microbatches(small, spec, FakeMesh()) == 1
+    assert dryrun.choose_microbatches(cfg, registry.SHAPES["decode_32k"],
+                                      FakeMesh()) == 1
+
+
+def test_probe_correction_arithmetic():
+    cfg = registry.get_config("stablelm-12b")
+    rec = {
+        "microbatches": 4,
+        "probes": {
+            "u1": {"cost": {"flops": 110.0, "bytes_accessed": 60.0},
+                   "collectives": {"operand_bytes": 12.0,
+                                   "ring_wire_bytes": 24.0}},
+            "u2": {"cost": {"flops": 210.0, "bytes_accessed": 110.0},
+                   "collectives": {"operand_bytes": 22.0,
+                                   "ring_wire_bytes": 44.0}},
+        },
+    }
+    out = dryrun.correct(rec, cfg)
+    # B = 100, F = 10, L = 40, M = 4 => 4 * (10 + 40*100) = 16040
+    assert out["flops"] == pytest.approx(4 * (10 + 40 * 100))
+    assert out["flops_per_unit"] == pytest.approx(100)
+    assert out["collective_operand_bytes"] == pytest.approx(
+        4 * (2 + 40 * 10))
+
+
+def test_n_units_families():
+    assert dryrun.n_units(registry.get_config("qwen2-72b")) == 80
+    assert dryrun.n_units(registry.get_config("recurrentgemma-2b")) == \
+        pytest.approx(26 / 3)
+    assert dryrun.n_units(registry.get_config("whisper-base")) == 6
+
+
+def test_hbm_napkin_fields():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    cfg = registry.get_config("qwen2-72b")
+    nap = dryrun.hbm_napkin(cfg, registry.SHAPES["train_4k"], FakeMesh(), 16)
+    assert nap["params"] == pytest.approx(cfg.param_count() * 4 / 256,
+                                          rel=1e-6)
+    assert nap["total"] < 16 * 2**30  # fits v5e HBM
+    napd = dryrun.hbm_napkin(cfg, registry.SHAPES["decode_32k"],
+                             FakeMesh(), 1)
+    assert "kv_cache" in napd and napd["total"] < 16 * 2**30

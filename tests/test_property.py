@@ -1,0 +1,108 @@
+"""Property-based tests over randomized task sets.
+
+``hypothesis`` is not installed in this container, so properties run over
+seeded random sweeps (20 draws each) — same invariants, deterministic CI.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import dvfs, online, scheduling, single_task, tasks
+from repro.core.dvfs import DvfsParams, WIDE
+
+SEEDS = range(20)
+
+
+def random_params(rng) -> DvfsParams:
+    p_star = rng.uniform(120, 260)
+    gamma = p_star * rng.uniform(0.05, 0.25)
+    p0 = p_star * rng.uniform(0.1, 0.5)
+    return DvfsParams(p0=p0, gamma=gamma, c=p_star - gamma - p0,
+                      big_d=rng.uniform(1.0, 50.0),
+                      delta=rng.uniform(0.0, 1.0),
+                      t0=rng.uniform(0.05, 5.0))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_solution_always_inside_box_and_saves_energy(seed):
+    rng = np.random.default_rng(seed)
+    p = random_params(rng)
+    b = DvfsParams(*(np.asarray([f]) for f in p.astuple()))
+    sol = single_task.solve_unconstrained(b)
+    v = float(np.asarray(sol.v)[0])
+    fc = float(np.asarray(sol.fc)[0])
+    fm = float(np.asarray(sol.fm)[0])
+    assert WIDE.v_min - 1e-5 <= v <= WIDE.v_max + 1e-5
+    assert WIDE.fc_min - 1e-5 <= fc <= dvfs.g1_float(v) + 1e-4
+    assert WIDE.fm_min - 1e-5 <= fm <= WIDE.fm_max + 1e-5
+    # never worse than running at the default setting
+    assert float(np.asarray(sol.energy)[0]) <= \
+        float(np.asarray(p.default_energy())) * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_deadline_solution_meets_deadline_iff_feasible(seed):
+    rng = np.random.default_rng(100 + seed)
+    p = random_params(rng)
+    b = DvfsParams(*(np.asarray([f]) for f in p.astuple()))
+    tmin = float(dvfs.min_time(p, WIDE))
+    tstar = float(p.default_time())
+    allowed = rng.uniform(0.5 * tmin, 2.0 * tstar)
+    sol = single_task.solve_with_deadline(b, np.asarray([allowed]))
+    feas = bool(np.asarray(sol.feasible)[0])
+    t = float(np.asarray(sol.time)[0])
+    assert feas == (allowed >= tmin - 1e-5)
+    if feas:
+        assert t <= allowed * (1 + 1e-4)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_offline_schedule_invariants(seed):
+    rng = np.random.default_rng(200 + seed)
+    util = float(rng.uniform(0.02, 0.15))
+    l = int(rng.choice([1, 2, 4, 8]))
+    theta = float(rng.choice([0.8, 0.9, 1.0]))
+    ts = tasks.generate_offline(util, seed=seed)
+    r = scheduling.schedule_offline(ts, l=l, theta=theta, algorithm="edl")
+    # every task assigned exactly once
+    assert sorted(a.task for a in r.assignments) == list(range(len(ts)))
+    assert r.violations == 0
+    # pairs never overlap
+    by_pair = {}
+    for a in r.assignments:
+        by_pair.setdefault(a.pair, []).append((a.start, a.finish))
+    for spans in by_pair.values():
+        spans.sort()
+        for (s1, f1), (s2, f2) in zip(spans, spans[1:]):
+            assert s2 >= f1 - 1e-6
+    # energy accounting
+    assert r.e_total == pytest.approx(r.e_run + r.e_idle + r.e_overhead)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_online_offline_consistency_at_t0(seed):
+    """An online run whose tasks ALL arrive at T=0 must match the offline
+    scheduler's runtime energy (same Algorithm 1 optima)."""
+    ts = tasks.generate_offline(0.05, seed=300 + seed)
+    r_off = scheduling.schedule_offline(ts, l=1, theta=1.0, algorithm="edl")
+    r_on = online.schedule_online(ts, l=1, theta=1.0, algorithm="edl")
+    assert r_on.e_run == pytest.approx(r_off.e_run, rel=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_kernel_solver_agrees_with_reference(seed):
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(400 + seed)
+    rows = [random_params(rng) for _ in range(32)]
+    params = DvfsParams.stack(rows)
+    tstar = np.asarray(params.default_time())
+    allowed = tstar * rng.uniform(0.6, 2.0, 32)
+    sol = ops.dvfs_solve(params, allowed)
+    tasks_mat = np.stack([np.asarray(f, np.float32)
+                          for f in params.astuple()]
+                         + [allowed.astype(np.float32),
+                            np.zeros(32, np.float32)], axis=1)
+    expect = ref.dvfs_solve_ref(tasks_mat)
+    rel = np.abs(sol.energy - expect[:, 5]) / np.maximum(expect[:, 5], 1e-9)
+    assert float(np.median(rel)) < 2e-3
+    assert float(np.mean(sol.deadline_prior == (expect[:, 6] > 0.5))) >= 0.9

@@ -1,0 +1,119 @@
+"""Offline EDL θ-readjustment scheduling (paper §4.2.1, Algorithms 2-3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import cluster as cl
+from repro.core import dvfs, scheduling, single_task, tasks
+from repro.core.dvfs import DvfsParams
+from repro.core.tasks import TaskSet
+
+
+def paper_table3_task_set() -> TaskSet:
+    """The worked example of §4.2 (Table 3): five tasks with
+    P = 100 + 50 fm + 150 V^2 fc (gamma=0 in the example's energy math),
+    t = 25 (delta/fc + (1-delta)/fm) + 5."""
+    deltas = [0.0, 1.0, 0.5, 0.8, 0.2]
+    deadlines = [50.0, 36.0, 60.0, 100.0, 300.0]
+    rows = [DvfsParams(p0=100.0, gamma=0.0, c=200.0, big_d=25.0,
+                       delta=d, t0=5.0) for d in deltas]
+    params = DvfsParams.stack(rows)
+    arrival = np.zeros(5)
+    return TaskSet(arrival=arrival, deadline=np.asarray(deadlines),
+                   params=params, utilization=np.full(5, 0.5))
+
+
+def test_table3_deadline_prior_classification():
+    ts = paper_table3_task_set()
+    cfg = scheduling.configure(ts, use_dvfs=True)
+    # J2 (delta=1.0, d=36) is the deadline-prior one in the paper's example
+    assert bool(cfg.deadline_prior[1])
+    assert cfg.n_deadline_prior == 1
+    # its execution time is pinned to the deadline
+    assert cfg.t_hat[1] == pytest.approx(36.0, abs=1e-3)
+
+
+def test_table3_theta_readjustment_packs_two_pairs():
+    """§4.2 worked example: θ=0.9 packs five tasks onto 2 pairs; θ=1 needs 3."""
+    ts = paper_table3_task_set()
+    r_tight = scheduling.schedule_offline(ts, l=2, theta=0.9, algorithm="edl")
+    r_loose = scheduling.schedule_offline(ts, l=2, theta=1.0, algorithm="edl")
+    assert r_tight.violations == 0 and r_loose.violations == 0
+    assert r_tight.n_pairs == 2
+    assert r_loose.n_pairs == 3
+    assert r_tight.e_total < r_loose.e_total
+
+
+@pytest.mark.parametrize("alg", ["edl", "edf-wf", "edf-bf", "lpt-ff"])
+def test_no_deadline_violations(alg):
+    ts = tasks.generate_offline(0.1, seed=3)
+    r = scheduling.schedule_offline(ts, l=2, theta=0.9, algorithm=alg)
+    assert r.violations == 0
+    deadline = ts.deadline
+    for a in r.assignments:
+        assert a.finish <= deadline[a.task] + 1e-6
+
+
+def test_energy_accounting_identity():
+    """E_run equals the sum of assignment energies; E_idle matches a direct
+    recomputation from pair busy intervals (Eq. 6)."""
+    ts = tasks.generate_offline(0.08, seed=11)
+    r = scheduling.schedule_offline(ts, l=4, theta=0.9, algorithm="edl")
+    assert r.e_run == pytest.approx(sum(a.energy for a in r.assignments))
+    # recompute idle energy via Algorithm 3 from the assignment list
+    mu = {}
+    for a in r.assignments:
+        mu[a.pair] = max(mu.get(a.pair, 0.0), a.finish)
+    e_idle, n_srv = cl.offline_idle_energy(np.asarray(list(mu.values())), 4)
+    assert r.e_idle == pytest.approx(e_idle)
+    assert r.n_servers == n_srv
+
+
+def test_dvfs_saves_vs_baseline():
+    """Offline DVFS saving close to the paper's ~33.5% at l=1 (§5.3.2)."""
+    lib = tasks.app_library()
+    savings = []
+    for seed in range(3):
+        ts = tasks.generate_offline(0.3, seed=seed, library=lib)
+        base = cl.baseline_energy(ts)
+        r = scheduling.schedule_offline(ts, l=1, algorithm="edl",
+                                        use_dvfs=True)
+        savings.append(1 - r.e_total / base)
+    s = float(np.mean(savings))
+    assert 0.30 <= s <= 0.365, s
+
+
+def test_no_dvfs_baseline_energy_algorithm_independent():
+    ts = tasks.generate_offline(0.15, seed=5)
+    runs = [scheduling.schedule_offline(ts, l=1, algorithm=a, use_dvfs=False)
+            for a in ("edl", "edf-bf", "edf-wf", "lpt-ff")]
+    e = [r.e_run for r in runs]
+    assert max(e) - min(e) < 1e-6 * max(e)
+
+
+def test_theta_packs_fewer_pairs_large_l():
+    """The θ-readjustment's direct mechanism (Alg 2 lines 16-19): allowing
+    up to (1-θ) shrink packs tasks onto strictly fewer pairs.  The *total*
+    energy effect is calibration-sensitive offline (paper Fig 9 deltas are
+    1-3%; see EXPERIMENTS.md); the robust assertions are the pair count and
+    a bounded energy change."""
+    lib = tasks.app_library()
+    pairs_t1, pairs_t08, tot_t1, tot_t08 = [], [], [], []
+    for seed in range(3):
+        ts = tasks.generate_offline(0.25, seed=seed, library=lib)
+        r1 = scheduling.schedule_offline(ts, l=16, theta=1.0, algorithm="edl")
+        r08 = scheduling.schedule_offline(ts, l=16, theta=0.8,
+                                          algorithm="edl")
+        assert r1.violations == 0 and r08.violations == 0
+        pairs_t1.append(r1.n_pairs)
+        pairs_t08.append(r08.n_pairs)
+        tot_t1.append(r1.e_total)
+        tot_t08.append(r08.e_total)
+    assert np.mean(pairs_t08) < np.mean(pairs_t1)
+    assert np.mean(tot_t08) <= np.mean(tot_t1) * 1.02
+
+
+def test_pair_feasibility_flag():
+    ts = tasks.generate_offline(0.1, seed=2)
+    r = scheduling.schedule_offline(ts, l=1, algorithm="edl")
+    assert r.feasible_pairs == (r.n_pairs <= 2048)

@@ -1,0 +1,84 @@
+"""Online EDL + DRS and the bin-packing baseline (paper §4.2.2, Alg 4-6)."""
+
+import numpy as np
+import pytest
+
+from repro.core import cluster as cl
+from repro.core import online, tasks
+
+
+def small_online(seed=0):
+    return tasks.generate_online(offline_util=0.02, online_util=0.05,
+                                 seed=seed, horizon=200)
+
+
+@pytest.mark.parametrize("alg", ["edl", "bin"])
+def test_online_no_violations(alg):
+    ts = small_online(1)
+    r = online.schedule_online(ts, l=2, theta=0.9, algorithm=alg)
+    assert r.violations == 0
+    for a in r.assignments:
+        assert a.finish <= ts.deadline[a.task] + 1e-6
+        assert a.start >= ts.arrival[a.task] - 1e-6  # no time travel
+
+
+def test_online_energy_decomposition():
+    ts = small_online(2)
+    r = online.schedule_online(ts, l=4, theta=0.9, algorithm="edl")
+    assert r.e_total == pytest.approx(r.e_run + r.e_idle + r.e_overhead)
+    assert r.e_run == pytest.approx(sum(a.energy for a in r.assignments))
+    assert r.e_overhead >= 0 and r.e_idle >= 0
+    # overhead is a multiple of the per-pair turn-on cost
+    assert r.e_overhead % cl.DELTA_ON == pytest.approx(0.0, abs=1e-9)
+
+
+def test_online_every_task_scheduled_once():
+    ts = small_online(3)
+    r = online.schedule_online(ts, l=2, algorithm="edl")
+    seen = sorted(a.task for a in r.assignments)
+    assert seen == list(range(len(ts)))
+
+
+def test_online_pairs_never_overlap():
+    ts = small_online(4)
+    r = online.schedule_online(ts, l=2, algorithm="edl")
+    by_pair = {}
+    for a in r.assignments:
+        by_pair.setdefault(a.pair, []).append((a.start, a.finish))
+    for spans in by_pair.values():
+        spans.sort()
+        for (s1, f1), (s2, f2) in zip(spans, spans[1:]):
+            assert s2 >= f1 - 1e-6
+
+
+def test_online_dvfs_saves_runtime_energy():
+    """§5.4.2: GPU DVFS cuts ~1/3 of online runtime energy."""
+    ts = small_online(5)
+    r_d = online.schedule_online(ts, l=1, algorithm="edl", use_dvfs=True)
+    r_n = online.schedule_online(ts, l=1, algorithm="edl", use_dvfs=False)
+    assert r_d.violations == 0 and r_n.violations == 0
+    saving = 1 - r_d.e_run / r_n.e_run
+    assert 0.25 < saving < 0.40, saving
+
+
+def test_drs_turns_servers_off():
+    """With sparse arrivals the DRS sweep must power servers off between
+    bursts (bounded idle energy)."""
+    ts = small_online(6)
+    r = online.schedule_online(ts, l=1, algorithm="edl")
+    # idle upper bound: every pair idles at most ~rho per busy interval +
+    # the final rho tail; a gross violation means DRS never fired.
+    n_tasks = len(ts)
+    bound = cl.P_IDLE * (cl.RHO + 1) * (n_tasks + r.n_pairs) * 2
+    assert r.e_idle <= bound
+
+
+def test_theta_readjustment_reduces_total_energy_online():
+    tot1, tot09 = [], []
+    for seed in range(3):
+        ts = small_online(10 + seed)
+        r1 = online.schedule_online(ts, l=16, theta=1.0, algorithm="edl")
+        r09 = online.schedule_online(ts, l=16, theta=0.9, algorithm="edl")
+        tot1.append(r1.e_total)
+        tot09.append(r09.e_total)
+    assert np.mean(tot09) <= np.mean(tot1) * 1.005

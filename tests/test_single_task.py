@@ -1,0 +1,97 @@
+"""Single-task DVFS optimization (paper §4.1, Algorithm 1)."""
+
+import numpy as np
+import pytest
+
+from repro.core import dvfs, single_task, tasks
+from repro.core.dvfs import DvfsParams, WIDE, NARROW
+
+
+def batched(p: DvfsParams) -> DvfsParams:
+    return DvfsParams(*(np.asarray([f], np.float64) for f in p.astuple()))
+
+
+@pytest.mark.parametrize("i", [0, 3, 7, 12, 19])
+def test_unconstrained_matches_brute_force(i):
+    lib = tasks.app_library()
+    p = lib[i]
+    sol = single_task.solve_unconstrained(batched(p))
+    bf_e, _ = single_task.brute_force_optimum(p, n=200)
+    assert float(np.asarray(sol.energy)[0]) == pytest.approx(bf_e, rel=2e-3)
+
+
+@pytest.mark.parametrize("frac", [0.9, 0.95, 0.99])
+def test_deadline_constrained_matches_brute_force(frac):
+    lib = tasks.app_library()
+    p = lib[5]
+    tmin = float(dvfs.min_time(p, WIDE))
+    tstar = float(p.default_time())
+    allowed = tmin + frac * 0.3 * (tstar - tmin)
+    sol = single_task.solve_with_deadline(batched(p), np.asarray([allowed]))
+    bf_e, _ = single_task.brute_force_optimum(p, allowed=allowed, n=220)
+    assert float(np.asarray(sol.energy)[0]) == pytest.approx(bf_e, rel=6e-3)
+    assert float(np.asarray(sol.time)[0]) <= allowed + 1e-5
+
+
+def test_deadline_infeasible_runs_max_speed():
+    lib = tasks.app_library()
+    p = lib[2]
+    tmin = float(dvfs.min_time(p, WIDE))
+    sol = single_task.solve_with_deadline(batched(p),
+                                          np.asarray([0.5 * tmin]))
+    assert not bool(np.asarray(sol.feasible)[0])
+    assert float(np.asarray(sol.fc)[0]) == pytest.approx(WIDE.fc_max, rel=1e-5)
+    assert float(np.asarray(sol.fm)[0]) == pytest.approx(WIDE.fm_max, rel=1e-5)
+
+
+def test_energy_prior_keeps_unconstrained_optimum():
+    lib = tasks.app_library()
+    p = lib[4]
+    unc = single_task.solve_unconstrained(batched(p))
+    loose = float(np.asarray(unc.time)[0]) * 2.0
+    sol = single_task.solve_with_deadline(batched(p), np.asarray([loose]))
+    assert not bool(np.asarray(sol.deadline_prior)[0])
+    assert float(np.asarray(sol.energy)[0]) == pytest.approx(
+        float(np.asarray(unc.energy)[0]), rel=1e-5)
+
+
+def test_library_wide_saving_anchor():
+    """Paper Fig. 4: mean single-task energy saving ~= 36.4% on the wide
+    interval (the calibrated library anchor all scheduling numbers hang
+    off)."""
+    lib = tasks.app_library()
+    sol = single_task.solve_unconstrained(lib)
+    saving = 1.0 - np.asarray(sol.energy) / np.asarray(lib.default_energy())
+    assert float(np.mean(saving)) == pytest.approx(0.364, abs=0.01)
+    # narrow interval saves much less (paper §5.2 direction)
+    soln = single_task.solve_unconstrained(lib, NARROW)
+    saving_n = 1 - np.asarray(soln.energy) / np.asarray(lib.default_energy())
+    assert float(np.mean(saving_n)) < float(np.mean(saving)) * 0.7
+
+
+def test_configure_tasks_algorithm1():
+    ts = tasks.generate_offline(0.05, seed=7)
+    cfg = single_task.configure_tasks(ts.params, ts.deadline - ts.arrival)
+    assert cfg.n_deadline_prior == int(np.sum(cfg.deadline_prior))
+    # deadline-prior tasks sit exactly on their deadline window
+    dp = cfg.deadline_prior & cfg.feasible
+    win = (ts.deadline - ts.arrival)[dp]
+    np.testing.assert_allclose(cfg.t_hat[dp], win, rtol=1e-5)
+    # energy-prior tasks fit within their window
+    ep = ~cfg.deadline_prior
+    assert np.all(cfg.t_hat[ep] <= (ts.deadline - ts.arrival)[ep] + 1e-6)
+    # DVFS never increases energy vs default for feasible tasks
+    e_def = np.asarray(ts.params.default_energy())
+    assert np.all(cfg.e_hat[cfg.feasible] <= e_def[cfg.feasible] * 1.0001)
+
+
+def test_readjustment_hits_window():
+    lib = tasks.app_library()
+    p = lib[8]
+    tstar = float(p.default_time())
+    window = 0.95 * tstar
+    v, fc, fm, t, pw, e = single_task.readjust(p, window)
+    assert t <= window + 1e-6
+    # readjusted energy >= unconstrained optimum (giving up optimality)
+    unc = single_task.solve_unconstrained(batched(p))
+    assert e >= float(np.asarray(unc.energy)[0]) - 1e-3

@@ -1,0 +1,54 @@
+"""End-to-end behaviour: the paper's full pipeline (Algorithm 1 -> EDL ->
+server grouping) reproduces the headline numbers, and the LM framework
+trains/serves through the same public API the examples use."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cluster as cl
+from repro.core import online, scheduling, single_task, tasks
+
+
+def test_offline_pipeline_headline_savings():
+    """Offline l=1: DVFS EDL saves ~33.5% vs the no-DVFS baseline while the
+    theoretical per-task bound is ~36.4% (paper §5.3.2) — the scheduler
+    must land between deadline losses and the bound."""
+    lib = tasks.app_library()
+    ts = tasks.generate_offline(0.4, seed=0, library=lib)
+    base = cl.baseline_energy(ts)
+    r = scheduling.schedule_offline(ts, l=1, algorithm="edl", use_dvfs=True)
+    saving = 1 - r.e_total / base
+    assert r.violations == 0
+    assert 0.29 <= saving <= 0.365
+
+
+def test_online_pipeline_headline_savings():
+    """Online: runtime-energy saving ~34.7% (paper §5.4.2 direction) and the
+    total saving stays within a few points of it at l=1."""
+    ts = tasks.generate_online(offline_util=0.05, online_util=0.1, seed=0,
+                               horizon=400)
+    r_d = online.schedule_online(ts, l=1, theta=0.9, algorithm="edl",
+                                 use_dvfs=True)
+    r_n = online.schedule_online(ts, l=1, theta=1.0, algorithm="edl",
+                                 use_dvfs=False)
+    assert r_d.violations == 0
+    run_saving = 1 - r_d.e_run / r_n.e_run
+    assert 0.28 <= run_saving <= 0.40
+    tot_saving = 1 - r_d.e_total / r_n.e_total
+    assert tot_saving > 0.25
+
+
+def test_end_to_end_train_and_serve_api():
+    """The examples' public path: launch.train + launch.serve round trip."""
+    from repro.launch.train import main as train_main
+    from repro.launch.serve import main as serve_main
+    out = train_main(["--arch", "recurrentgemma-2b", "--preset", "smoke",
+                      "--steps", "6", "--batch", "2", "--seq", "48"])
+    assert out["final_step"] == 6
+    assert np.isfinite(out["losses"]).all()
+    stats = serve_main(["--arch", "recurrentgemma-2b", "--preset", "smoke",
+                        "--requests", "2", "--prompt-len", "8",
+                        "--gen", "4"])
+    assert stats["new_tokens"] == 8

@@ -1,0 +1,123 @@
+"""Trainer (grad accumulation, compression) and the accelerator-job adapter
+that feeds roofline-derived LM jobs into the paper's scheduler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.jobs import (AcceleratorJob, RooflineTerms, jobs_to_task_set,
+                             synth_job_stream)
+from repro.core.scheduling import schedule_offline
+from repro.data.pipeline import SyntheticLMData
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+from repro.train.trainer import init_state, make_train_step
+
+
+def small_model():
+    return Model(get_config("stablelm-12b").reduced())
+
+
+def batch_of(model, B=8, S=32, seed=0, mode="succ"):
+    d = SyntheticLMData.for_config(model.cfg, S, B, seed=seed, mode=mode)
+    return {k: jnp.asarray(v) for k, v in d.batch(0).items()}
+
+
+def test_grad_accumulation_matches_single_batch():
+    model = small_model()
+    opt = AdamW(learning_rate=1e-3)
+    state = init_state(model, opt, jax.random.key(0))
+    batch = batch_of(model)
+    s1 = make_train_step(model, opt, microbatches=1,
+                         param_axes=model.param_axes())
+    s4 = make_train_step(model, opt, microbatches=4,
+                         param_axes=model.param_axes())
+    n1, m1 = s1(state, batch)
+    n4, m4 = s4(state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-3)
+    assert float(m1["grad_norm"]) == pytest.approx(float(m4["grad_norm"]),
+                                                   rel=1e-3)
+    # Adam normalizes per-element, so bf16 grad noise near zero can flip an
+    # update's sign: param diffs are bounded by ~2 * lr, not by grad error.
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        n1.params, n4.params)
+    assert max(jax.tree.leaves(diffs)) < 3.0 * 1e-3
+
+
+def test_training_reduces_loss_on_copy_task():
+    model = small_model()
+    opt = AdamW(learning_rate=3e-3)
+    state = init_state(model, opt, jax.random.key(0))
+    step = jax.jit(make_train_step(model, opt,
+                                   param_axes=model.param_axes()),
+                   donate_argnums=0)
+    data = SyntheticLMData.for_config(model.cfg, 64, 8, mode="succ")
+    first = last = None
+    for i in range(30):
+        state, m = step(state, {k: jnp.asarray(v)
+                                for k, v in data.batch(i).items()})
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.5, (first, last)
+
+
+def test_compressed_grads_still_learn():
+    model = small_model()
+    opt = AdamW(learning_rate=3e-3)
+    state = init_state(model, opt, jax.random.key(0))
+    step = jax.jit(make_train_step(model, opt, compress_grads=True,
+                                   param_axes=model.param_axes()),
+                   donate_argnums=0)
+    data = SyntheticLMData.for_config(model.cfg, 64, 8, mode="succ")
+    first = last = None
+    for i in range(25):
+        state, m = step(state, {k: jnp.asarray(v)
+                                for k, v in data.batch(i).items()})
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.3
+    assert "quant_err" in m
+
+
+# -- accelerator-job adapter (paper technique as framework feature) -------------
+
+
+def test_roofline_terms_delta():
+    t = RooflineTerms("a", "s", compute_s=3.0, memory_s=1.0,
+                      collective_s=0.5)
+    assert t.delta == pytest.approx(0.75)
+    assert t.bottleneck == "compute"
+    assert t.step_time == 3.0
+
+
+def test_job_params_collective_share_joins_t0():
+    t = RooflineTerms("a", "s", compute_s=1.0, memory_s=0.5,
+                      collective_s=0.8)
+    job = AcceleratorJob(arch="a", shape="s", steps=100, arrival=0.0,
+                         deadline_slack=2.0, terms=t)
+    p = job.to_params()
+    # t0 fraction >= collective fraction of the step
+    assert float(p.t0) / float(p.default_time()) >= 0.8 / 1.0 - 1e-6
+
+
+def test_jobs_schedule_end_to_end():
+    terms = {
+        "qwen2-72b/train_4k": RooflineTerms("qwen2-72b", "train_4k",
+                                            3.0, 1.0, 0.4),
+        "mamba2-370m/decode_32k": RooflineTerms("mamba2-370m", "decode_32k",
+                                                0.1, 0.9, 0.05),
+    }
+    jobs = synth_job_stream(terms, n_jobs=40, seed=1)
+    ts = jobs_to_task_set(jobs)
+    assert len(ts) == 40
+    r = schedule_offline(ts.subset(ts.arrival == 0.0), l=2, theta=0.9,
+                         algorithm="edl")
+    assert r.violations == 0
+    # compute-bound jobs should get delta close to 0.75, memory-bound low
+    deltas = np.asarray(ts.params.delta)
+    assert deltas.min() < 0.3 and deltas.max() > 0.6
