@@ -21,7 +21,8 @@ ALGOS = ("edl", "edf-bf", "edf-wf", "lpt-ff")
 
 
 def run(groups: int = 3, utils=(0.2, 0.4, 0.8), ls=(1, 4, 16),
-        theta: float = 1.0, verbose: bool = True) -> Dict:
+        theta: float = 1.0, verbose: bool = True,
+        use_kernel: bool = False) -> Dict:
     lib = tasks.app_library()
     out: Dict[str, Dict] = {}
     for u in utils:
@@ -33,7 +34,7 @@ def run(groups: int = 3, utils=(0.2, 0.4, 0.8), ls=(1, 4, 16),
                     for use_dvfs in (False, True):
                         r = scheduling.schedule_offline(
                             ts, l=l, theta=theta, algorithm=alg,
-                            use_dvfs=use_dvfs)
+                            use_dvfs=use_dvfs, use_kernel=use_kernel)
                         key = f"U{u}/l{l}/{alg}{'+dvfs' if use_dvfs else ''}"
                         d = out.setdefault(key, {
                             "e_total": [], "saving": [], "pairs": [],
@@ -78,12 +79,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--theta", type=float, default=1.0)
+    ap.add_argument("--kernel", action="store_true",
+                    help="route Algorithm 1 through the Pallas kernel")
     args = ap.parse_args(argv)
     if args.full:
         run(groups=100, utils=(0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4, 1.6),
-            ls=(1, 2, 4, 8, 16), theta=args.theta)
+            ls=(1, 2, 4, 8, 16), theta=args.theta, use_kernel=args.kernel)
     else:
-        run(theta=args.theta)
+        run(theta=args.theta, use_kernel=args.kernel)
 
 
 if __name__ == "__main__":

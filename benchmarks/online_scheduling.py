@@ -18,7 +18,7 @@ from repro.core import online, tasks
 
 def run(groups: int = 2, u_off: float = 0.1, u_on: float = 0.4,
         horizon: int = 400, ls=(1, 4, 16), theta: float = 0.9,
-        verbose: bool = True) -> Dict:
+        verbose: bool = True, use_kernel: bool = False) -> Dict:
     lib = tasks.app_library()
     out: Dict[str, Dict] = {}
     for seed in range(groups):
@@ -30,7 +30,8 @@ def run(groups: int = 2, u_off: float = 0.1, u_on: float = 0.4,
                     th = theta if use_dvfs else 1.0
                     r = online.schedule_online(ts, l=l, theta=th,
                                                algorithm=alg,
-                                               use_dvfs=use_dvfs)
+                                               use_dvfs=use_dvfs,
+                                               use_kernel=use_kernel)
                     key = f"l{l}/{alg}{'+dvfs' if use_dvfs else ''}"
                     d = out.setdefault(key, {"run": [], "idle": [],
                                              "ovh": [], "viol": 0})
@@ -70,12 +71,14 @@ def run(groups: int = 2, u_off: float = 0.1, u_on: float = 0.4,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--kernel", action="store_true",
+                    help="route the DVFS solves through the Pallas kernel")
     args = ap.parse_args(argv)
     if args.full:
         run(groups=10, u_off=0.4, u_on=1.6, horizon=1440,
-            ls=(1, 2, 4, 8, 16))
+            ls=(1, 2, 4, 8, 16), use_kernel=args.kernel)
     else:
-        run()
+        run(use_kernel=args.kernel)
 
 
 if __name__ == "__main__":

@@ -1,19 +1,26 @@
 """The paper's low-overhead claim (§2.1): Algorithm 1's per-task solve must
 be cheap enough for instantaneous online decisions.  Measures tasks/second
 for the production jnp solver and the Pallas kernel path, plus end-to-end
-slots/second of the online simulator."""
+slots/second of the online simulator — including the paper-scale 10k-task
+day-long EDL simulation that the ClusterEngine refactor targets.
+"""
 
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import record
 from repro.core import online, single_task, tasks
 
+# Wall-clock of the pre-engine (seed, commit 025555f) implementation on the
+# 10k-task online EDL simulation below, measured on the reference container:
+# per-slot solver dispatches, scalar theta-readjustment solves and python
+# object-graph pair selection.  The ClusterEngine + batched-kernel path must
+# beat it by >= 5x (it measures ~21x on the same machine).
+SEED_10K_EDL_SECONDS = 36.0
 
-def run(n_tasks: int = 4096, verbose: bool = True) -> dict:
+
+def run(n_tasks: int = 4096, verbose: bool = True, full: bool = True) -> dict:
     lib = tasks.app_library()
     ts = tasks.generate_offline(n_tasks / 2048.0, seed=0, library=lib)
     allowed = ts.deadline - ts.arrival
@@ -39,7 +46,31 @@ def run(n_tasks: int = 4096, verbose: bool = True) -> dict:
     dt = time.time() - t0
     record("online/sim_throughput", dt / 400 * 1e6,
            f"{400/dt:.0f} slots/s, {len(ts_on)} tasks")
-    return {"jnp_tasks_per_s": len(ts) / dt_jnp}
+
+    out = {"jnp_tasks_per_s": len(ts) / dt_jnp}
+
+    if full:
+        # The acceptance-scale run: ~10k tasks over a 1440-slot day, EDL +
+        # theta-readjustment, everything through the Pallas kernel (one
+        # pallas_call for the horizon's Algorithm-1 solves, one for the
+        # deferred readjustment batch).
+        ts_10k = tasks.generate_online(0.4, 4.4, seed=0, library=lib,
+                                       horizon=1440)
+        t0 = time.time()
+        r = online.schedule_online(ts_10k, l=4, theta=0.9, algorithm="edl",
+                                   use_kernel=True)
+        dt10 = time.time() - t0
+        speedup = SEED_10K_EDL_SECONDS / dt10
+        record("online/10k_edl_kernel", dt10 / 1440 * 1e6,
+               f"{len(ts_10k)/dt10:.0f} tasks/s, {speedup:.1f}x vs seed")
+        out.update({"edl_10k_seconds": dt10, "edl_10k_speedup_vs_seed": speedup,
+                    "edl_10k_e_total": r.e_total,
+                    "edl_10k_violations": r.violations})
+        if verbose:
+            print(f"10k-task online EDL (use_kernel=True): {dt10:.2f}s "
+                  f"({speedup:.1f}x vs seed {SEED_10K_EDL_SECONDS:.1f}s), "
+                  f"e_total={r.e_total:.4e}, violations={r.violations}")
+    return out
 
 
 if __name__ == "__main__":

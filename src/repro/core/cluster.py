@@ -1,4 +1,4 @@
-"""Cluster state and energy accounting (paper S3.1.2, Eq. 6-7).
+"""Cluster energy accounting and schedule result types (paper S3.1.2, Eq. 6-7).
 
 A cluster has ``m`` servers of ``l`` CPU-GPU pairs each (we model the
 homogeneous case the paper simulates: every server has the same ``l``, the
@@ -18,18 +18,23 @@ Energy decomposition (Eq. 7)::
 The offline objective (Eq. 6) is the special case with no overhead term and
 servers that run from t=0 until their longest pair finishes (Algorithm 3
 groups pairs into servers after the mapping is fixed).
+
+The live cluster *state* (pair finish times, server on/off DRS bookkeeping)
+lives in :class:`repro.core.engine.ClusterEngine` — the single vectorized
+state machine shared by the offline and online schedulers.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
 P_IDLE = 37.0        # W, idle pair power (24 W CPU + 13 W GPU), S5.1.2
 DELTA_ON = 90.0      # J, per-pair turn on/off overhead, S5.1.2
 RHO = 2              # slots; floor(DELTA_ON / P_IDLE), S5.1.2
+MAX_PAIRS = 2048     # cluster-wide pair budget, S5.1.2
 
 
 @dataclasses.dataclass
@@ -46,45 +51,6 @@ class Assignment:
     power: float
     energy: float
     readjusted: bool = False
-
-
-@dataclasses.dataclass
-class Pair:
-    """A CPU-GPU pair's running schedule."""
-
-    idx: int
-    server: int = -1
-    mu: float = 0.0          # finish time of the last scheduled task
-    busy: float = 0.0        # cumulative busy time
-    tasks: List[int] = dataclasses.field(default_factory=list)
-
-    def add(self, task: int, start: float, duration: float):
-        self.tasks.append(task)
-        self.mu = start + duration
-        self.busy += duration
-
-
-@dataclasses.dataclass
-class Server:
-    """A server hosting ``l`` pairs, with DRS on/off bookkeeping."""
-
-    idx: int
-    pairs: List[int]
-    on: bool = False
-    on_since: float = 0.0
-    on_time: float = 0.0     # cumulative powered-on duration
-    turn_ons: int = 0        # omega contribution counts pairs, not servers
-
-    def power_on(self, t: float, pair_count: int):
-        assert not self.on
-        self.on = True
-        self.on_since = t
-        self.turn_ons += pair_count
-
-    def power_off(self, t: float):
-        assert self.on
-        self.on = False
-        self.on_time += t - self.on_since
 
 
 @dataclasses.dataclass
@@ -124,69 +90,26 @@ def offline_idle_energy(pair_busy_end: np.ndarray, l: int, p_idle: float = P_IDL
     what makes the paper's Table-3 example favor θ=0.9 over θ=1).  Sorting
     by finish time minimizes the summed idle gap for a fixed group size.
     """
-    mu = np.sort(np.asarray(pair_busy_end))[::-1]
+    f_j = server_spans(pair_busy_end, l)
+    e_idle = float(f_j.sum()) * l - float(np.sum(pair_busy_end))
+    return p_idle * e_idle, int(f_j.shape[0])
+
+
+def server_spans(pair_busy_end: np.ndarray, l: int) -> np.ndarray:
+    """Algorithm 3 grouping: per-virtual-server span ``F_j``, one entry per
+    server of ``l`` pairs (pairs sorted by finish time descending; a group's
+    span is its longest pair).  Shared by :func:`offline_idle_energy` and
+    the engine's offline finalizer."""
+    mu = np.sort(np.asarray(pair_busy_end, dtype=np.float64))[::-1]
     n = mu.shape[0]
-    e_idle = 0.0
-    n_servers = 0
-    for j in range(0, n, l):
-        group = mu[j:j + l]
-        f_j = group[0]
-        e_idle += float(np.sum(f_j - group)) + (l - group.shape[0]) * f_j
-        n_servers += 1
-    return p_idle * e_idle, n_servers
+    if n == 0:
+        return np.zeros(0)
+    n_servers = -(-n // l)
+    padded = np.concatenate([mu, np.zeros(n_servers * l - n)])
+    return padded.reshape(n_servers, l)[:, 0]   # desc sort => group max first
 
 
 def baseline_energy(task_set) -> float:
     """The paper's reference point: no DVFS, l=1 (no idle energy) -- the energy
     of running every task at the default setting, sum_i P*_i t*_i."""
     return float(np.sum(task_set.p_star * task_set.t_star))
-
-
-class PairPool:
-    """Allocates pairs on demand and tracks the server <-> pair mapping for the
-    online simulator.  Servers are created lazily, ``l`` pairs each."""
-
-    def __init__(self, l: int, max_pairs: int = 2048):
-        self.l = l
-        self.max_pairs = max_pairs
-        self.pairs: List[Pair] = []
-        self.servers: List[Server] = []
-
-    def new_server(self, t: float) -> Server:
-        sid = len(self.servers)
-        pair_ids = []
-        for _ in range(self.l):
-            pid = len(self.pairs)
-            self.pairs.append(Pair(idx=pid, server=sid))
-            pair_ids.append(pid)
-        srv = Server(idx=sid, pairs=pair_ids)
-        srv.power_on(t, self.l)
-        self.servers.append(srv)
-        return srv
-
-    @property
-    def n_pairs(self) -> int:
-        return len(self.pairs)
-
-    def feasible(self) -> bool:
-        return self.n_pairs <= self.max_pairs
-
-    def on_pairs(self) -> List[Pair]:
-        out = []
-        for srv in self.servers:
-            if srv.on:
-                out.extend(self.pairs[p] for p in srv.pairs)
-        return out
-
-    def finalize(self, t_end: float):
-        """Power everything off and return (E_idle, E_overhead, on_servers_max)."""
-        for srv in self.servers:
-            if srv.on:
-                srv.power_off(t_end)
-        e_idle = 0.0
-        omega = 0
-        for srv in self.servers:
-            omega += srv.turn_ons
-            busy = sum(self.pairs[p].busy for p in srv.pairs)
-            e_idle += srv.on_time * self.l - busy
-        return P_IDLE * e_idle, DELTA_ON * omega

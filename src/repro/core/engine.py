@@ -1,0 +1,239 @@
+"""Vectorized cluster state machine shared by every scheduler (§3.1.2, §4.2).
+
+``ClusterEngine`` is the single source of truth for cluster state: pair
+finish times (``mu``) and cumulative busy time are flat numpy arrays, and
+server DRS bookkeeping (on/off, powered-on duration, turn-on counts) is a
+parallel set of arrays with pairs laid out contiguously per server
+(``server j`` owns pairs ``[j*l, (j+1)*l)``).  The offline (Algorithms 1-3)
+and online (Algorithms 4-6) schedulers in :mod:`repro.core.scheduling` and
+:mod:`repro.core.online` are thin policy layers over this engine: they pick
+pairs via the vectorized ``worst_fit`` / ``best_fit`` / ``first_fit``
+selectors and never touch the arrays directly.
+
+Two operating modes share the arrays and the Eq. (7) finalizer:
+
+* ``servers=False`` (offline): pairs are opened on demand with no live
+  server bookkeeping; :meth:`finalize` runs Algorithm 3 — sort pairs by
+  finish time, group ``l`` consecutive pairs into a *virtual* server whose
+  powered-on span is its longest pair — and then evaluates the same
+  Eq. (7) sum with ``omega = 0``, which is exactly Eq. (6).
+* ``servers=True`` (online): pairs come in server granules of ``l``; the
+  DRS sweep powers a server off once all of its pairs have been idle for
+  ``rho`` slots, and every power-on adds ``l`` to the turn-on count
+  ``omega``.  :meth:`finalize` powers off the stragglers and returns
+
+      E_idle     = P_idle * (sum_j on_time_j * l - sum_k busy_k)
+      E_overhead = Delta * omega.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import cluster as cl
+
+_EPS = 1e-9
+
+
+class ClusterEngine:
+    """Struct-of-arrays pair/server state with vectorized policy selectors."""
+
+    def __init__(self, l: int, *, servers: bool = True, rho: int = cl.RHO,
+                 p_idle: float = cl.P_IDLE, delta_on: float = cl.DELTA_ON,
+                 max_pairs: int = cl.MAX_PAIRS):
+        self.l = int(l)
+        self.server_mode = bool(servers)
+        self.rho = rho
+        self.p_idle = p_idle
+        self.delta_on = delta_on
+        self.max_pairs = max_pairs
+        self.n_pairs = 0
+        self.n_servers = 0
+        cap_p, cap_s = 64, 16
+        self._mu = np.zeros(cap_p)
+        self._busy = np.zeros(cap_p)
+        self._on = np.zeros(cap_s, dtype=bool)
+        self._on_since = np.zeros(cap_s)
+        self._on_time = np.zeros(cap_s)
+        self._turn_ons = np.zeros(cap_s, dtype=np.int64)
+
+    # -- array views ---------------------------------------------------------
+    @property
+    def mu(self) -> np.ndarray:
+        """Finish time of the last task per pair, shape ``[n_pairs]``."""
+        return self._mu[: self.n_pairs]
+
+    @property
+    def busy(self) -> np.ndarray:
+        """Cumulative busy duration per pair, shape ``[n_pairs]``."""
+        return self._busy[: self.n_pairs]
+
+    @property
+    def feasible_pairs(self) -> bool:
+        return self.n_pairs <= self.max_pairs
+
+    def n_on_servers(self) -> int:
+        return int(np.count_nonzero(self._on[: self.n_servers]))
+
+    # -- growth --------------------------------------------------------------
+    def _grow_pairs(self, extra: int):
+        need = self.n_pairs + extra
+        if need <= self._mu.shape[0]:
+            return
+        cap = max(need, 2 * self._mu.shape[0])
+        self._mu = np.concatenate([self._mu, np.zeros(cap - self._mu.shape[0])])
+        self._busy = np.concatenate([self._busy,
+                                     np.zeros(cap - self._busy.shape[0])])
+
+    def _grow_servers(self, extra: int):
+        need = self.n_servers + extra
+        if need <= self._on.shape[0]:
+            return
+        cap = max(need, 2 * self._on.shape[0])
+        pad = cap - self._on.shape[0]
+        self._on = np.concatenate([self._on, np.zeros(pad, dtype=bool)])
+        self._on_since = np.concatenate([self._on_since, np.zeros(pad)])
+        self._on_time = np.concatenate([self._on_time, np.zeros(pad)])
+        self._turn_ons = np.concatenate([self._turn_ons,
+                                         np.zeros(pad, dtype=np.int64)])
+
+    # -- transitions ---------------------------------------------------------
+    def open_pair(self, mu0: float = 0.0) -> int:
+        """A fresh standalone pair (offline mode: no server bookkeeping)."""
+        assert not self.server_mode
+        self._grow_pairs(1)
+        pid = self.n_pairs
+        self._mu[pid] = mu0
+        self._busy[pid] = 0.0
+        self.n_pairs += 1
+        return pid
+
+    def new_server(self, t: float) -> int:
+        """Build and power on a server of ``l`` fresh pairs; returns its id."""
+        assert self.server_mode
+        self._grow_servers(1)
+        self._grow_pairs(self.l)
+        sid = self.n_servers
+        self._on[sid] = True
+        self._on_since[sid] = t
+        self._turn_ons[sid] = self.l
+        lo = self.n_pairs
+        self._mu[lo: lo + self.l] = t   # a fresh pair is free *now*
+        self._busy[lo: lo + self.l] = 0.0
+        self.n_servers += 1
+        self.n_pairs += self.l
+        return sid
+
+    def wake_server(self, sid: int, t: float):
+        self._on[sid] = True
+        self._on_since[sid] = t
+        self._turn_ons[sid] += self.l
+        self._mu[sid * self.l: (sid + 1) * self.l] = t
+
+    def acquire_pair(self, t: float) -> int:
+        """A fresh pair: prefer re-powering an off server over building one."""
+        off = np.flatnonzero(~self._on[: self.n_servers])
+        if off.size:
+            sid = int(off[0])
+            self.wake_server(sid, t)
+        else:
+            sid = self.new_server(t)
+        return sid * self.l
+
+    def assign(self, pid: int, start: float, duration: float):
+        self._mu[pid] = start + duration
+        self._busy[pid] += duration
+
+    def drs_sweep(self, t: float):
+        """Power off every server whose pairs have all been idle >= rho."""
+        ns = self.n_servers
+        if not ns:
+            return
+        mu_srv = self._mu[: ns * self.l].reshape(ns, self.l).max(axis=1)
+        on = self._on[: ns]
+        off = on & (t - mu_srv >= self.rho - _EPS)
+        if off.any():
+            self._on_time[: ns][off] += t - self._on_since[: ns][off]
+            self._on[: ns][off] = False
+
+    # -- pair selection (the policy rules' vectorized primitives) ------------
+    def eligible_mask(self):
+        """Mask of assignable pairs (``None`` == all): every pair offline,
+        only pairs of powered-on servers online."""
+        if not self.server_mode:
+            return None
+        return np.repeat(self._on[: self.n_servers], self.l)
+
+    def worst_fit(self) -> int:
+        """The pair with the smallest mu (SPT; ties -> smallest id), or -1."""
+        if self.n_pairs == 0:
+            return -1
+        mu = self.mu
+        mask = self.eligible_mask()
+        if mask is None:
+            return int(np.argmin(mu))
+        if not mask.any():
+            return -1
+        return int(np.argmin(np.where(mask, mu, np.inf)))
+
+    def _fits(self, t_now: float, deadline: float, t_hat: float):
+        mu = self.mu
+        fit = deadline - np.maximum(t_now, mu) >= t_hat - _EPS
+        mask = self.eligible_mask()
+        return fit if mask is None else (fit & mask)
+
+    def best_fit(self, t_now: float, deadline: float, t_hat: float) -> int:
+        """The *fitting* pair with the largest mu (tightest fit), or -1."""
+        if self.n_pairs == 0:
+            return -1
+        fit = self._fits(t_now, deadline, t_hat)
+        if not fit.any():
+            return -1
+        return int(np.argmax(np.where(fit, self.mu, -np.inf)))
+
+    def first_fit(self, t_now: float, deadline: float, t_hat: float) -> int:
+        """The lowest-id fitting pair, or -1."""
+        if self.n_pairs == 0:
+            return -1
+        fit = self._fits(t_now, deadline, t_hat)
+        if not fit.any():
+            return -1
+        return int(np.argmax(fit))
+
+    # -- Eq. (7) finalizer ---------------------------------------------------
+    def _energy(self):
+        ns = self.n_servers
+        e_idle = self.p_idle * (float(self._on_time[:ns].sum()) * self.l
+                                - float(self.busy.sum()))
+        e_overhead = self.delta_on * float(self._turn_ons[:ns].sum())
+        return e_idle, e_overhead
+
+    def finalize(self):
+        """Close the books: returns ``(e_idle, e_overhead, n_servers)``.
+
+        Online mode powers off the remaining servers ``rho`` slots after
+        their last pair frees up; offline mode first runs Algorithm 3 to
+        group the standalone pairs into virtual servers (powered on for
+        exactly their longest pair's span).  Both then evaluate the same
+        Eq. (7) idle/overhead sums over the server arrays.
+        """
+        if self.server_mode:
+            ns = self.n_servers
+            if ns:
+                mu_srv = self._mu[: ns * self.l].reshape(ns, self.l).max(axis=1)
+                on = self._on[: ns]
+                self._on_time[: ns][on] += (mu_srv[on] + self.rho
+                                            - self._on_since[: ns][on])
+                self._on[: ns] = False
+        elif self.n_pairs:
+            # Algorithm 3: each virtual server is powered on for exactly its
+            # longest pair's span.
+            spans = cl.server_spans(self.mu, self.l)
+            ns = spans.shape[0]
+            self._grow_servers(ns)
+            self._on_time[:ns] = spans
+            self._turn_ons[:ns] = 0
+            self._on[:ns] = False
+            self.n_servers = ns
+        e_idle, e_overhead = self._energy()
+        return e_idle, e_overhead, self.n_servers

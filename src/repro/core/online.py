@@ -19,6 +19,15 @@ The bin-packing baseline (Algorithm 6) replaces the pair-selection rule with
 worst-fit on utilization for the offline batch and first-fit for online
 arrivals, with no readjustment - the heuristic used by Liu et al. [41].
 
+Cluster state lives in :class:`~repro.core.engine.ClusterEngine` (the same
+vectorized pair/server arrays the offline scheduler packs into), and the
+per-task DVFS solves are batched: a task's slot-relative window
+``d - floor(a)`` is known before the simulation starts, so Algorithm 1 runs
+ONCE for the whole horizon (one ``pallas_call`` with ``use_kernel=True``),
+and the theta-readjustment re-solves — whose windows only pin finish times,
+never the packing decisions — are deferred and batch-solved in one more
+dispatch at the end (``single_task.readjust_batch``).
+
 Energy accounting follows Eq. (7):
 
     E_total = E_run + E_idle + E_overhead
@@ -28,128 +37,20 @@ Energy accounting follows Eq. (7):
 
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
+from typing import List, Tuple
 
 import numpy as np
 
 from repro.core import cluster as cl
 from repro.core import dvfs, single_task
 from repro.core.dvfs import ScalingInterval
+from repro.core.engine import ClusterEngine
+from repro.core.scheduling import (count_violations, default_config,
+                                   fill_readjusted, make_assignment)
 from repro.core.single_task import TaskConfig
 from repro.core.tasks import TaskSet
 
 _EPS = 1e-9
-
-
-@dataclasses.dataclass
-class _PairState:
-    idx: int
-    server: int
-    mu: float = 0.0       # finish time of the last assigned task
-    busy: float = 0.0     # cumulative busy duration
-
-
-@dataclasses.dataclass
-class _ServerState:
-    idx: int
-    pairs: List[int]
-    on: bool = False
-    on_since: float = 0.0
-    on_time: float = 0.0
-    turn_ons: int = 0     # counted in pair units (omega)
-
-    def power_on(self, t: float):
-        self.on = True
-        self.on_since = t
-        self.turn_ons += len(self.pairs)
-
-    def power_off(self, t: float):
-        self.on = False
-        self.on_time += t - self.on_since
-
-
-class OnlineCluster:
-    """Slot-driven cluster simulator shared by EDL and bin-packing."""
-
-    def __init__(self, l: int, rho: int = cl.RHO, p_idle: float = cl.P_IDLE,
-                 delta_on: float = cl.DELTA_ON, max_pairs: int = 2048):
-        self.l = l
-        self.rho = rho
-        self.p_idle = p_idle
-        self.delta_on = delta_on
-        self.max_pairs = max_pairs
-        self.pairs: List[_PairState] = []
-        self.servers: List[_ServerState] = []
-
-    # -- state interrogation ------------------------------------------------
-    def on_pair_ids(self) -> List[int]:
-        out: List[int] = []
-        for srv in self.servers:
-            if srv.on:
-                out.extend(srv.pairs)
-        return out
-
-    @property
-    def n_pairs(self) -> int:
-        return len(self.pairs)
-
-    def n_on_servers(self) -> int:
-        return sum(1 for s in self.servers if s.on)
-
-    # -- transitions ---------------------------------------------------------
-    def new_server(self, t: float) -> _ServerState:
-        sid = len(self.servers)
-        pair_ids = []
-        for _ in range(self.l):
-            pid = len(self.pairs)
-            self.pairs.append(_PairState(idx=pid, server=sid, mu=t))
-            pair_ids.append(pid)
-        srv = _ServerState(idx=sid, pairs=pair_ids)
-        srv.power_on(t)
-        self.servers.append(srv)
-        return srv
-
-    def wake_server(self, srv: _ServerState, t: float):
-        srv.power_on(t)
-        for pid in srv.pairs:
-            self.pairs[pid].mu = t  # an awakened pair is free *now*
-
-    def acquire_pair(self, t: float) -> _PairState:
-        """A fresh pair: prefer re-powering an off server over building one."""
-        for srv in self.servers:
-            if not srv.on:
-                self.wake_server(srv, t)
-                return self.pairs[srv.pairs[0]]
-        return self.pairs[self.new_server(t).pairs[0]]
-
-    def drs_sweep(self, t: float):
-        """Turn off every server whose pairs have all been idle >= rho."""
-        for srv in self.servers:
-            if not srv.on:
-                continue
-            mu_max = max(self.pairs[p].mu for p in srv.pairs)
-            if t - mu_max >= self.rho - _EPS:
-                srv.power_off(t)
-
-    def assign(self, pair: _PairState, start: float, duration: float):
-        pair.mu = start + duration
-        pair.busy += duration
-
-    # -- energy --------------------------------------------------------------
-    def finalize(self):
-        """Power off remaining servers and return (E_idle, E_overhead)."""
-        for srv in self.servers:
-            if srv.on:
-                mu_max = max(self.pairs[p].mu for p in srv.pairs)
-                srv.power_off(mu_max + self.rho)
-        e_idle = 0.0
-        omega = 0
-        for srv in self.servers:
-            omega += srv.turn_ons
-            busy = sum(self.pairs[p].busy for p in srv.pairs)
-            e_idle += srv.on_time * self.l - busy
-        return self.p_idle * e_idle, self.delta_on * omega
 
 
 def _slot_groups(task_set: TaskSet):
@@ -177,100 +78,88 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
 
     deadline = np.asarray(task_set.deadline, dtype=np.float64)
     arrival = np.asarray(task_set.arrival, dtype=np.float64)
-    clu = OnlineCluster(l, rho=rho, p_idle=p_idle, delta_on=delta_on)
-    assignments: List[cl.Assignment] = []
-    violations = 0
 
-    import heapq
+    # Algorithm 1 (Alg 5, lines 1-4) for the WHOLE horizon in one batch: the
+    # per-task window d - T is fixed by the arrival slot, so nothing forces a
+    # per-slot solve.  With use_kernel=True this is a single pallas_call.
+    if use_dvfs:
+        allowed = deadline - arrival.astype(np.int64).astype(np.float64)
+        cfg = single_task.configure_tasks(task_set.params, allowed, interval,
+                                          use_kernel=use_kernel)
+    else:
+        cfg = default_config(task_set)
+
+    eng = ClusterEngine(l, servers=True, rho=rho, p_idle=p_idle,
+                        delta_on=delta_on)
+    assignments: List[cl.Assignment] = []
+    pending: List[Tuple[int, int, float]] = []
 
     for slot, idx in _slot_groups(task_set):
         t_now = float(slot)
-        clu.drs_sweep(t_now)
-
-        # Phase 1 (Alg 5, lines 1-4): per-task optimal configuration.
-        sub = task_set.subset(idx)
-        if use_dvfs:
-            cfg = single_task.configure_tasks(
-                sub.params, deadline[idx] - t_now, interval, use_kernel=use_kernel)
-        else:
-            from repro.core.scheduling import default_config
-            cfg = default_config(sub)
-        violations += int(np.sum(~cfg.feasible))
+        eng.drs_sweep(t_now)
 
         order = np.argsort(deadline[idx], kind="stable")  # EDF
 
         if algorithm == "bin" and slot == 0:
             # Algorithm 6 offline phase: worst-fit on task utilization.
-            _binpack_offline(clu, task_set, idx, order, cfg, t_now, assignments)
+            _binpack_offline(eng, deadline, idx, order, cfg, t_now,
+                             assignments)
             continue
 
         for r in order:
-            r = int(r)
-            gidx = int(idx[r])
+            gidx = int(idx[int(r)])
             d = deadline[gidx]
-            t_hat = float(cfg.t_hat[r])
+            t_hat = float(cfg.t_hat[gidx])
 
-            on_ids = clu.on_pair_ids()
             placed = False
-            if on_ids:
-                if algorithm == "edl":
-                    cand = [min(on_ids, key=lambda p: (clu.pairs[p].mu, p))]
-                else:  # bin: first-fit in pair-id order
-                    cand = sorted(on_ids)
-                for pid in cand:
-                    pair = clu.pairs[pid]
-                    start = max(t_now, pair.mu)
+            if algorithm == "edl":
+                pid = eng.worst_fit()   # SPT: the ON pair free the earliest
+                if pid >= 0:
+                    start = max(t_now, float(eng.mu[pid]))
                     if d - start >= t_hat - _EPS:
-                        clu.assign(pair, start, t_hat)
-                        assignments.append(_mk(gidx, pid, start, cfg, r))
+                        eng.assign(pid, start, t_hat)
+                        assignments.append(make_assignment(gidx, pid, start, cfg))
                         placed = True
-                        break
-                if not placed and algorithm == "edl" and theta < 1.0:
-                    pid = cand[0]
-                    pair = clu.pairs[pid]
-                    start = max(t_now, pair.mu)
-                    t_theta = max(theta * t_hat, float(cfg.t_min[r]))
-                    window = d - start
-                    if window >= t_theta - _EPS:
-                        ov = single_task.readjust(task_set.params[gidx],
-                                                  float(window), interval)
-                        clu.assign(pair, start, ov[3])
-                        assignments.append(cl.Assignment(
-                            task=gidx, pair=pid, start=float(start),
-                            finish=float(start + ov[3]), v=ov[0], fc=ov[1],
-                            fm=ov[2], power=ov[4], energy=ov[5],
-                            readjusted=True))
-                        placed = True
+                    elif theta < 1.0:
+                        t_theta = max(theta * t_hat, float(cfg.t_min[gidx]))
+                        window = d - start
+                        if window >= t_theta - _EPS:
+                            eng.assign(pid, start, window)
+                            pending.append((len(assignments), gidx, window))
+                            assignments.append(make_assignment(
+                                gidx, pid, start, cfg, duration=window,
+                                readjusted=True))
+                            placed = True
+            else:  # bin: first-fit in pair-id order
+                pid = eng.first_fit(t_now, d, t_hat)
+                if pid >= 0:
+                    start = max(t_now, float(eng.mu[pid]))
+                    eng.assign(pid, start, t_hat)
+                    assignments.append(make_assignment(gidx, pid, start, cfg))
+                    placed = True
             if not placed:
-                pair = clu.acquire_pair(t_now)
-                start = max(t_now, pair.mu)
-                clu.assign(pair, start, t_hat)
-                assignments.append(_mk(gidx, pair.idx, start, cfg, r))
+                pid = eng.acquire_pair(t_now)
+                start = max(t_now, float(eng.mu[pid]))
+                eng.assign(pid, start, t_hat)
+                assignments.append(make_assignment(gidx, pid, start, cfg))
 
-    e_idle, e_overhead = clu.finalize()
+    # Deferred theta-readjustment solves: one batched dispatch for the run.
+    fill_readjusted(assignments, pending, task_set, interval, use_kernel)
+
+    e_idle, e_overhead, n_servers = eng.finalize()
     e_run = float(sum(a.energy for a in assignments))
-    for a in assignments:
-        if a.finish > deadline[a.task] + 1e-6:
-            violations += 1
+    violations = count_violations(assignments, deadline, cfg.feasible)
     mk = max((a.finish for a in assignments), default=0.0)
     return cl.ScheduleResult(
         algorithm=f"online-{algorithm}{'+dvfs' if use_dvfs else ''}",
         e_run=e_run, e_idle=e_idle, e_overhead=e_overhead,
-        n_pairs=clu.n_pairs, n_servers=len(clu.servers),
+        n_pairs=eng.n_pairs, n_servers=n_servers,
         violations=violations, assignments=assignments, makespan=mk,
-        feasible_pairs=clu.n_pairs <= clu.max_pairs,
+        feasible_pairs=eng.feasible_pairs,
     )
 
 
-def _mk(task: int, pid: int, start: float, cfg: TaskConfig, row: int) -> cl.Assignment:
-    return cl.Assignment(
-        task=task, pair=pid, start=float(start),
-        finish=float(start + cfg.t_hat[row]), v=float(cfg.v[row]),
-        fc=float(cfg.fc[row]), fm=float(cfg.fm[row]),
-        power=float(cfg.p_hat[row]), energy=float(cfg.e_hat[row]))
-
-
-def _binpack_offline(clu: OnlineCluster, task_set: TaskSet, idx, order,
+def _binpack_offline(eng: ClusterEngine, deadline: np.ndarray, idx, order,
                      cfg: TaskConfig, t_now: float,
                      assignments: List[cl.Assignment]):
     """Algorithm 6, lines 1-7: worst-fit on utilization, cap at 1.0.
@@ -279,27 +168,28 @@ def _binpack_offline(clu: OnlineCluster, task_set: TaskSet, idx, order,
     worst-fit heuristic sends each task to the pair with the lowest current
     utilization, opening a new pair when the best candidate would exceed 1.
     """
-    deadline = np.asarray(task_set.deadline, dtype=np.float64)
-    pair_util: dict[int, float] = {}
+    util = np.zeros(0)
     for r in order:
-        r = int(r)
-        gidx = int(idx[r])
-        t_hat = float(cfg.t_hat[r])
-        u_hat = t_hat / max(deadline[gidx] - t_now, _EPS)
-        on_ids = clu.on_pair_ids()
-        best: Optional[int] = None
-        if on_ids:
-            best = min(on_ids, key=lambda p: (pair_util.get(p, 0.0), p))
-            pair = clu.pairs[best]
-            start = max(t_now, pair.mu)
-            if (pair_util.get(best, 0.0) + u_hat > 1.0 + _EPS or
-                    deadline[gidx] - start < t_hat - _EPS):
-                best = None
-        if best is None:
-            pair = clu.acquire_pair(t_now)
-            best = pair.idx
-        pair = clu.pairs[best]
-        start = max(t_now, pair.mu)
-        clu.assign(pair, start, t_hat)
-        pair_util[best] = pair_util.get(best, 0.0) + u_hat
-        assignments.append(_mk(gidx, best, start, cfg, r))
+        gidx = int(idx[int(r)])
+        d = deadline[gidx]
+        t_hat = float(cfg.t_hat[gidx])
+        u_hat = t_hat / max(d - t_now, _EPS)
+        if util.shape[0] < eng.n_pairs:
+            util = np.concatenate([util,
+                                   np.zeros(eng.n_pairs - util.shape[0])])
+        pid = -1
+        on = eng.eligible_mask()
+        if on is not None and on.any():
+            pid = int(np.argmin(np.where(on, util[: eng.n_pairs], np.inf)))
+            start = max(t_now, float(eng.mu[pid]))
+            if util[pid] + u_hat > 1.0 + _EPS or d - start < t_hat - _EPS:
+                pid = -1
+        if pid < 0:
+            pid = eng.acquire_pair(t_now)
+            if util.shape[0] < eng.n_pairs:
+                util = np.concatenate(
+                    [util, np.zeros(eng.n_pairs - util.shape[0])])
+        start = max(t_now, float(eng.mu[pid]))
+        eng.assign(pid, start, t_hat)
+        util[pid] += u_hat
+        assignments.append(make_assignment(gidx, pid, start, cfg))

@@ -3,36 +3,41 @@
 
 All offline algorithms share the same three-phase structure:
 
-1. **Algorithm 1** - per-task optimal DVFS configuration (deadline-aware);
-   deadline-prior tasks get the boundary solution, energy-prior tasks get the
-   unconstrained optimum.
+1. **Algorithm 1** - per-task optimal DVFS configuration (deadline-aware),
+   one batched solve for the whole task set (the Pallas kernel with
+   ``use_kernel=True``); deadline-prior tasks get the boundary solution,
+   energy-prior tasks get the unconstrained optimum.
 2. **Task packing** - deadline-prior tasks are pinned to fresh pairs first
    (they must start at t=0), then the energy-prior tasks are placed in EDF
-   order by the policy-specific rule:
+   order by the policy-specific rule, each a vectorized selector on the
+   :class:`~repro.core.engine.ClusterEngine` pair arrays:
 
    * ``edl``    - shortest-processing-time pair (worst fit) **with
      theta-readjustment**: if the task does not fit at its optimal length, its
      execution is allowed to shrink to ``max(theta * t_hat, t_min)`` by
      re-solving the DVFS setting with the remaining window as deadline
-     (Algorithm 2, lines 16-19).
+     (Algorithm 2, lines 16-19).  The re-solves only pin the finish time to
+     the window during packing; the actual DVFS settings/energies are
+     batch-solved afterwards in ONE dispatch (`single_task.readjust_batch`).
    * ``edf-wf`` - worst fit (min mu), no readjustment;
    * ``edf-bf`` - best fit (max mu among fitting pairs), no readjustment;
    * ``lpt-ff`` - longest-processing-time order, first fit, no readjustment.
 
-3. **Algorithm 3** - pairs are sorted by finish time and grouped into servers
+3. **Algorithm 3** - the engine finalizer groups pairs into virtual servers
    of ``l``; idle energy is ``P_idle * sum_j sum_k (F_j - tau_kj)`` (Eq. 6).
 """
 
 from __future__ import annotations
 
-import heapq
-from typing import Optional
+import dataclasses
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import cluster as cl
 from repro.core import dvfs, single_task
-from repro.core.dvfs import DvfsParams, ScalingInterval
+from repro.core.dvfs import ScalingInterval
+from repro.core.engine import ClusterEngine
 from repro.core.single_task import TaskConfig
 from repro.core.tasks import TaskSet
 
@@ -67,17 +72,56 @@ def configure(task_set: TaskSet, use_dvfs: bool,
                                        use_kernel=use_kernel)
 
 
-def _assignment(task: int, pair: int, start: float, cfg: TaskConfig,
-                override=None, readjusted=False) -> cl.Assignment:
-    if override is None:
-        v, fc, fm, t, p, e = (cfg.v[task], cfg.fc[task], cfg.fm[task],
-                              cfg.t_hat[task], cfg.p_hat[task], cfg.e_hat[task])
-    else:
-        v, fc, fm, t, p, e = override
+def make_assignment(task: int, pair: int, start: float, cfg: TaskConfig,
+                    duration: Optional[float] = None,
+                    readjusted: bool = False) -> cl.Assignment:
+    """An assignment at the task's configured setting; a readjusted one gets
+    its finish pinned to ``start + duration`` and its DVFS fields filled in
+    later by :func:`fill_readjusted`."""
+    t = cfg.t_hat[task] if duration is None else duration
     return cl.Assignment(task=task, pair=pair, start=float(start),
-                         finish=float(start + t), v=float(v), fc=float(fc),
-                         fm=float(fm), power=float(p), energy=float(e),
-                         readjusted=readjusted)
+                         finish=float(start + t), v=float(cfg.v[task]),
+                         fc=float(cfg.fc[task]), fm=float(cfg.fm[task]),
+                         power=float(cfg.p_hat[task]),
+                         energy=float(cfg.e_hat[task]), readjusted=readjusted)
+
+
+def fill_readjusted(assignments: List[cl.Assignment],
+                    pending: List[Tuple[int, int, float]],
+                    task_set: TaskSet, interval: ScalingInterval,
+                    use_kernel: bool):
+    """Solve every deferred theta-readjustment in ONE batched dispatch and
+    write the DVFS settings/energies back into the assignment list.
+
+    ``pending`` rows are ``(assignment_index, task_index, window)``.  The
+    schedule itself never depends on these solves — a readjusted task always
+    occupies exactly its window — so they are batched after packing: one
+    ``pallas_call`` (or one jitted boundary solve) instead of one scalar
+    dispatch per readjusted task.
+    """
+    if not pending:
+        return
+    rows = np.asarray([t for _, t, _ in pending], dtype=np.int64)
+    windows = np.asarray([w for _, _, w in pending], dtype=np.float64)
+    v, fc, fm, t, p, e = single_task.readjust_batch(
+        task_set.params[rows], windows, interval, use_kernel=use_kernel)
+    for k, (ai, _, _) in enumerate(pending):
+        a = assignments[ai]
+        assignments[ai] = dataclasses.replace(
+            a, v=float(v[k]), fc=float(fc[k]), fm=float(fm[k]),
+            power=float(p[k]), energy=float(e[k]))
+
+
+def count_violations(assignments: List[cl.Assignment], deadline: np.ndarray,
+                     feasible: np.ndarray) -> int:
+    """Each violated task counts exactly once: infeasible at configuration
+    time (cannot meet its deadline at max speed) OR finished past its
+    deadline — never both."""
+    violated = ~np.asarray(feasible, dtype=bool)
+    for a in assignments:
+        if a.finish > deadline[a.task] + 1e-6:
+            violated[a.task] = True
+    return int(np.sum(violated))
 
 
 def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
@@ -93,19 +137,18 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     if cfg is None:
         cfg = configure(task_set, use_dvfs, interval, use_kernel=use_kernel)
 
-    n = len(task_set)
     deadline = np.asarray(task_set.deadline, dtype=np.float64)
-    assignments: list[cl.Assignment] = []
-    violations = int(np.sum(~cfg.feasible))
-
-    pair_mu: list[float] = []       # finish time per pair, indexed by pair id
+    assignments: List[cl.Assignment] = []
+    pending: List[Tuple[int, int, float]] = []
+    eng = ClusterEngine(l, servers=False, p_idle=p_idle)
 
     # --- Phase 2a: deadline-prior tasks, each started at t=0 on a fresh pair.
     dp_idx = np.nonzero(cfg.deadline_prior)[0]
     for t_idx in dp_idx[np.argsort(deadline[dp_idx], kind="stable")]:
-        pid = len(pair_mu)
-        pair_mu.append(float(cfg.t_hat[t_idx]))
-        assignments.append(_assignment(int(t_idx), pid, 0.0, cfg))
+        t_idx = int(t_idx)
+        pid = eng.open_pair()
+        eng.assign(pid, 0.0, float(cfg.t_hat[t_idx]))
+        assignments.append(make_assignment(t_idx, pid, 0.0, cfg))
 
     # --- Phase 2b: energy-prior tasks by the policy rule.
     ep_idx = np.nonzero(~cfg.deadline_prior)[0]
@@ -114,73 +157,55 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     else:
         order = ep_idx[np.argsort(deadline[ep_idx], kind="stable")]
 
-    if algorithm in ("edl", "edf-wf"):
-        # Maintain a min-heap over pair finish times (SPT / worst fit).
-        heap = [(mu, pid) for pid, mu in enumerate(pair_mu)]
-        heapq.heapify(heap)
-        for t_idx in order:
-            t_idx = int(t_idx)
-            d = deadline[t_idx]
-            t_hat = float(cfg.t_hat[t_idx])
-            if heap:
-                mu_spt, pid = heap[0]
-            else:
-                mu_spt, pid = np.inf, -1
-            if pid >= 0 and d - mu_spt >= t_hat - _EPS:
-                heapq.heapreplace(heap, (mu_spt + t_hat, pid))
-                pair_mu[pid] = mu_spt + t_hat
-                assignments.append(_assignment(t_idx, pid, mu_spt, cfg))
+    for t_idx in order:
+        t_idx = int(t_idx)
+        d = deadline[t_idx]
+        t_hat = float(cfg.t_hat[t_idx])
+
+        if algorithm in ("edl", "edf-wf"):
+            pid = eng.worst_fit()
+            mu = float(eng.mu[pid]) if pid >= 0 else np.inf
+            if pid >= 0 and d - mu >= t_hat - _EPS:
+                eng.assign(pid, mu, t_hat)
+                assignments.append(make_assignment(t_idx, pid, mu, cfg))
                 continue
             if algorithm == "edl" and pid >= 0:
                 t_theta = max(theta * t_hat, float(cfg.t_min[t_idx]))
-                window = d - mu_spt
+                window = d - mu
                 if window >= t_theta - _EPS:
-                    # theta-readjustment: re-solve with the window as deadline.
-                    override = single_task.readjust(
-                        task_set.params[t_idx], float(window), interval)
-                    heapq.heapreplace(heap, (mu_spt + override[3], pid))
-                    pair_mu[pid] = mu_spt + override[3]
-                    assignments.append(_assignment(t_idx, pid, mu_spt, cfg,
-                                                   override, readjusted=True))
+                    # theta-readjustment: the task shrinks to exactly the
+                    # remaining window; its DVFS setting is batch-solved
+                    # after packing (fill_readjusted).
+                    eng.assign(pid, mu, window)
+                    pending.append((len(assignments), t_idx, window))
+                    assignments.append(make_assignment(t_idx, pid, mu, cfg,
+                                                   duration=window,
+                                                   readjusted=True))
                     continue
-            pid = len(pair_mu)
-            pair_mu.append(t_hat)
-            heapq.heappush(heap, (t_hat, pid))
-            assignments.append(_assignment(t_idx, pid, 0.0, cfg))
-    else:
-        # edf-bf (tightest fitting pair) and lpt-ff (first fitting pair):
-        # linear scans; pair counts stay in the low thousands.
-        mus = np.asarray(pair_mu, dtype=np.float64)
-        for t_idx in order:
-            t_idx = int(t_idx)
-            d = deadline[t_idx]
-            t_hat = float(cfg.t_hat[t_idx])
-            fits = np.nonzero(d - mus >= t_hat - _EPS)[0]
-            if fits.size:
-                pid = int(fits[np.argmax(mus[fits])]) if algorithm == "edf-bf" \
-                    else int(fits[0])
-                start = float(mus[pid])
-                mus[pid] += t_hat
-            else:
-                pid = mus.shape[0]
-                mus = np.append(mus, t_hat)
-                start = 0.0
-            assignments.append(_assignment(t_idx, pid, start, cfg))
-        pair_mu = mus.tolist()
+        else:
+            pid = eng.best_fit(0.0, d, t_hat) if algorithm == "edf-bf" \
+                else eng.first_fit(0.0, d, t_hat)
+            if pid >= 0:
+                start = float(eng.mu[pid])
+                eng.assign(pid, start, t_hat)
+                assignments.append(make_assignment(t_idx, pid, start, cfg))
+                continue
+        pid = eng.open_pair()
+        eng.assign(pid, 0.0, t_hat)
+        assignments.append(make_assignment(t_idx, pid, 0.0, cfg))
+
+    # --- Deferred theta-readjustment solves: one batched dispatch.
+    fill_readjusted(assignments, pending, task_set, interval, use_kernel)
 
     # --- Phase 3: Algorithm 3 server grouping + Eq. (6) energies.
     e_run = float(sum(a.energy for a in assignments))
-    busy_end = np.asarray(pair_mu, dtype=np.float64)
-    e_idle, n_servers = cl.offline_idle_energy(busy_end, l, p_idle) \
-        if busy_end.size else (0.0, 0)
-    for a in assignments:
-        if a.finish > deadline[a.task] + 1e-6:
-            violations += 1
+    e_idle, e_overhead, n_servers = eng.finalize()
+    violations = count_violations(assignments, deadline, cfg.feasible)
     return cl.ScheduleResult(
         algorithm=f"{algorithm}{'+dvfs' if use_dvfs else ''}",
-        e_run=e_run, e_idle=e_idle, e_overhead=0.0,
-        n_pairs=len(pair_mu), n_servers=n_servers, violations=violations,
+        e_run=e_run, e_idle=e_idle, e_overhead=e_overhead,
+        n_pairs=eng.n_pairs, n_servers=n_servers, violations=violations,
         assignments=assignments,
-        makespan=float(busy_end.max()) if busy_end.size else 0.0,
-        feasible_pairs=len(pair_mu) <= 2048,
+        makespan=float(eng.mu.max()) if eng.n_pairs else 0.0,
+        feasible_pairs=eng.feasible_pairs,
     )

@@ -144,6 +144,20 @@ def _deadline_energy_of_fm(params: DvfsParams, fm, allowed, interval: ScalingInt
     return e, (v, fc)
 
 
+def _boundary_optimum(params: DvfsParams, allowed, interval: ScalingInterval):
+    """The deadline-boundary optimum ``(v, fc, fm)``: 1-D search over fm on
+    the ``t(fc, fm) = allowed`` manifold (params/allowed already f32)."""
+
+    def efm(fm):
+        return _deadline_energy_of_fm(params, fm, allowed, interval)[0]
+
+    lo = jnp.full_like(params.big_d, interval.fm_min)
+    hi = jnp.full_like(params.big_d, interval.fm_max)
+    fm = _grid_then_golden(efm, lo, hi)
+    _, (v, fc) = _deadline_energy_of_fm(params, fm, allowed, interval)
+    return v, fc, fm
+
+
 @partial(jax.jit, static_argnames=("interval",))
 def solve_with_deadline(params: DvfsParams, allowed,
                         interval: ScalingInterval = dvfs.WIDE) -> DvfsSolution:
@@ -159,15 +173,7 @@ def solve_with_deadline(params: DvfsParams, allowed,
     unc = solve_unconstrained(params, interval)
     energy_prior = unc.time <= allowed + 1e-6
 
-    def efm(fm):
-        return _deadline_energy_of_fm(params, fm, allowed, interval)[0]
-
-    lo = jnp.full_like(params.big_d, interval.fm_min)
-    hi = jnp.full_like(params.big_d, interval.fm_max)
-    fm = _grid_then_golden(efm, lo, hi)
-    e, (v, fc) = _deadline_energy_of_fm(params, fm, allowed, interval)
-    t = dvfs.exec_time(params, fc, fm)
-    p = dvfs.power(params, v, fc, fm)
+    v, fc, fm = _boundary_optimum(params, allowed, interval)
 
     # Infeasible deadline => max speed, still report honestly.
     tmin = dvfs.min_time(params, interval)
@@ -187,6 +193,31 @@ def solve_with_deadline(params: DvfsParams, allowed,
     p = dvfs.power(params, v, fc, fm)
     e = p * t
     return DvfsSolution(v, fc, fm, t, p, e, ~energy_prior, feasible)
+
+
+@partial(jax.jit, static_argnames=("interval",))
+def solve_on_boundary(params: DvfsParams, allowed,
+                      interval: ScalingInterval = dvfs.WIDE) -> DvfsSolution:
+    """The deadline-boundary solve used by theta-readjustment.
+
+    A readjustment shrinks a task's window *below* its optimal execution
+    time, so the constrained optimum sits on the ``t = allowed`` boundary by
+    construction — no unconstrained solve or energy-prior comparison is
+    needed.  Windows below ``t_min`` fall back to max speed (infeasible).
+    """
+    params = DvfsParams(*(jnp.asarray(f, jnp.float32) for f in params.astuple()))
+    allowed = jnp.asarray(allowed, jnp.float32)
+    v, fc, fm = _boundary_optimum(params, allowed, interval)
+
+    tmin = dvfs.min_time(params, interval)
+    feasible = allowed >= tmin - 1e-6
+    v = jnp.where(feasible, v, interval.v_max)
+    fc = jnp.where(feasible, fc, interval.fc_max)
+    fm = jnp.where(feasible, fm, interval.fm_max)
+    t = dvfs.exec_time(params, fc, fm)
+    p = dvfs.power(params, v, fc, fm)
+    dp = jnp.ones_like(feasible)
+    return DvfsSolution(v, fc, fm, t, p, p * t, dp, feasible)
 
 
 # ---------------------------------------------------------------------------
@@ -209,17 +240,10 @@ class TaskConfig(NamedTuple):
     n_deadline_prior: int
 
 
-def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvfs.WIDE,
-                    use_kernel: bool = False) -> TaskConfig:
-    """Algorithm 1: per-task optimal DVFS settings for a whole task set.
-
-    ``allowed`` is ``d - a`` per task.  With ``use_kernel=True`` the batched
-    Pallas kernel (interpret mode on CPU) computes the unconstrained stage.
-
-    Batches are padded to the next power of two so the jitted solver
-    compiles O(log n) distinct shapes over a day-long online simulation
-    instead of one per slot population.
-    """
+def _pad_pow2(params: DvfsParams, allowed):
+    """Pad a batch to the next power of two (>= 8) by replicating the last
+    task, so the jitted solvers compile O(log n) distinct shapes over a
+    day-long online simulation instead of one per slot population."""
     n = int(np.shape(np.asarray(params.p0))[0])
     n_pad = max(8, 1 << (n - 1).bit_length())
     if n_pad != n:
@@ -230,13 +254,24 @@ def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvf
         allowed = np.concatenate(
             [np.asarray(allowed, np.float64),
              np.full(pad, np.asarray(allowed)[-1])])
+    return params, allowed, n
+
+
+def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvfs.WIDE,
+                    use_kernel: bool = False) -> TaskConfig:
+    """Algorithm 1: per-task optimal DVFS settings for a whole task set.
+
+    ``allowed`` is ``d - a`` per task.  With ``use_kernel=True`` the batched
+    Pallas kernel (interpret mode on CPU) computes the whole solve.
+    """
+    params, allowed, n = _pad_pow2(params, allowed)
     if use_kernel:
         from repro.kernels import ops as kernel_ops
 
         sol = kernel_ops.dvfs_solve(params, np.asarray(allowed), interval)
     else:
         sol = solve_with_deadline(params, allowed, interval)
-    if n_pad != n:
+    if np.shape(np.asarray(params.p0))[0] != n:
         sol = DvfsSolution(*(np.asarray(f)[:n] for f in sol))
         params = params[:n]
         allowed = np.asarray(allowed)[:n]
@@ -257,20 +292,47 @@ def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvf
     )
 
 
+def readjust_batch(params: DvfsParams, windows, interval: ScalingInterval = dvfs.WIDE,
+                   use_kernel: bool = False):
+    """Batched theta-readjustment: re-solve ``n`` tasks with shrunken time
+    budgets in ONE solver dispatch (Algorithm 2 lines 16-19 / Algorithm 5).
+
+    A readjusted window sits below the task's optimal execution time by
+    construction, so every row takes the deadline-boundary branch; with
+    ``use_kernel=True`` the whole batch goes through the Pallas kernel's
+    readjust sweep in a single ``pallas_call``.  Returns numpy arrays
+    ``(v, fc, fm, t, p, e)`` with ``t`` snapped to the window where feasible
+    (so scheduler mu updates land exactly on the deadline).
+    """
+    windows = np.asarray(windows, dtype=np.float64)
+    params, padded, n = _pad_pow2(params, windows)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        sol = kernel_ops.dvfs_solve(params, np.asarray(padded), interval,
+                                    readjust=True)
+    else:
+        sol = solve_on_boundary(params, padded, interval)
+    v, fc, fm, t, p = (np.asarray(f, np.float64)[:n]
+                       for f in (sol.v, sol.fc, sol.fm, sol.time, sol.power))
+    feas = np.asarray(sol.feasible)[:n]
+    t = np.where(feas, np.minimum(t, windows), t)  # snap the f32 residual
+    return v, fc, fm, t, p, p * t
+
+
 def readjust(params: DvfsParams, new_allowed: float,
              interval: ScalingInterval = dvfs.WIDE):
     """theta-readjustment: re-solve one task with a shrunken time budget.
 
-    Returns ``(v, fc, fm, t, p, e)`` as python floats.
+    Returns ``(v, fc, fm, t, p, e)`` as python floats.  Thin scalar wrapper
+    over :func:`readjust_batch`: ``new_allowed`` must sit below the task's
+    unconstrained optimal time (the readjustment regime) — the boundary
+    solution is returned unconditionally, so a window wide enough for the
+    interior optimum would come back pessimally stretched to fill it.
     """
     batched = DvfsParams(*(np.asarray([f], dtype=np.float64) for f in params.astuple()))
-    sol = solve_with_deadline(batched, np.asarray([new_allowed]), interval)
-    v, fc, fm, t, p, e = (float(np.asarray(f)[0]) for f in
-                          (sol.v, sol.fc, sol.fm, sol.time, sol.power, sol.energy))
-    if bool(np.asarray(sol.deadline_prior)[0]) and bool(np.asarray(sol.feasible)[0]):
-        t = min(t, float(new_allowed))  # snap the f32 boundary residual
-        e = p * t
-    return v, fc, fm, t, p, e
+    out = readjust_batch(batched, np.asarray([float(new_allowed)]), interval)
+    return tuple(float(np.asarray(f)[0]) for f in out)
 
 
 def brute_force_optimum(params: DvfsParams, allowed: float | None = None,

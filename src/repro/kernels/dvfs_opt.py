@@ -50,6 +50,7 @@ def _kernel(tasks_ref, out_ref, *, iv: ScalingInterval):
     p0, gamma, cc = t[:, 0:1], t[:, 1:2], t[:, 2:3]
     dd, delta, t0 = t[:, 3:4], t[:, 4:5], t[:, 5:6]
     allowed = t[:, 6:7]
+    readjust = t[:, 7] > 0.5   # theta-readjustment rows: boundary binds
 
     frac = jax.lax.broadcasted_iota(jnp.float32, (BT, G), 1) / (G - 1)
 
@@ -94,10 +95,11 @@ def _kernel(tasks_ref, out_ref, *, iv: ScalingInterval):
     e_dl = e_d[rows, idx]
     t_dl = jnp.minimum(t_d[rows, idx], allowed[:, 0])
 
-    # ---- decision rule (== solve_with_deadline):
+    # ---- decision rule (== solve_with_deadline / solve_on_boundary):
     # energy-prior if the unconstrained optimum meets the deadline;
-    # infeasible (deadline < t_min) -> run at max speed.
-    energy_prior = t_un <= allowed[:, 0] + 1e-6
+    # readjust rows shrank their window below the optimum, so the boundary
+    # binds by construction; infeasible (deadline < t_min) -> max speed.
+    energy_prior = (t_un <= allowed[:, 0] + 1e-6) & ~readjust
     t_min = (dd * (delta / fc_max + (1.0 - delta) / iv.fm_max) + t0)[:, 0]
     feasible = allowed[:, 0] >= t_min - 1e-6
     v_mx = jnp.full((BT,), iv.v_max, jnp.float32)

@@ -56,15 +56,20 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
 
 
 def dvfs_solve(params: DvfsParams, allowed: np.ndarray,
-               interval: ScalingInterval = WIDE) -> DvfsSolution:
+               interval: ScalingInterval = WIDE,
+               readjust: bool = False) -> DvfsSolution:
     """Batched single-task DVFS optimum via the Pallas kernel.
 
     Drop-in for ``single_task.solve_with_deadline`` (same DvfsSolution
-    contract; used by ``configure_tasks(use_kernel=True)``)."""
+    contract; used by ``configure_tasks(use_kernel=True)``).  With
+    ``readjust=True`` every row is flagged as a theta-readjustment (column
+    7 of the task matrix): the kernel then takes the deadline-boundary
+    sweep unconditionally — the drop-in for ``single_task.solve_on_boundary``
+    used by ``readjust_batch(use_kernel=True)``."""
     cols = [np.asarray(f, np.float32) for f in params.astuple()]
     n = cols[0].shape[0]
-    tasks = np.stack(cols + [np.asarray(allowed, np.float32),
-                             np.zeros(n, np.float32)], axis=1)
+    flag = np.ones(n, np.float32) if readjust else np.zeros(n, np.float32)
+    tasks = np.stack(cols + [np.asarray(allowed, np.float32), flag], axis=1)
     out = np.asarray(dvfs_solve_kernel(jnp.asarray(tasks), interval=interval,
                                        interpret=_interpret()))
     return DvfsSolution(v=out[:, 0], fc=out[:, 1], fm=out[:, 2],

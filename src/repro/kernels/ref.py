@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dvfs as dvfs_lib
 from repro.core import single_task
 from repro.core.dvfs import DvfsParams, ScalingInterval, WIDE
 
@@ -47,10 +46,18 @@ def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
 
 def dvfs_solve_ref(tasks: np.ndarray,
                    interval: ScalingInterval = WIDE) -> np.ndarray:
-    """Oracle for dvfs_opt: the production grid+golden solver."""
+    """Oracle for dvfs_opt: the production grid+golden solver.
+
+    Column 7 > 0.5 flags a theta-readjustment row: those take the forced
+    deadline-boundary solve (``solve_on_boundary``), matching the kernel's
+    readjust sweep."""
     params = DvfsParams(p0=tasks[:, 0], gamma=tasks[:, 1], c=tasks[:, 2],
                         big_d=tasks[:, 3], delta=tasks[:, 4], t0=tasks[:, 5])
     sol = single_task.solve_with_deadline(params, tasks[:, 6], interval)
+    readj = tasks[:, 7] > 0.5
+    if np.any(readj):
+        bnd = single_task.solve_on_boundary(params, tasks[:, 6], interval)
+        sol = type(sol)(*(jnp.where(readj, b, s) for s, b in zip(sol, bnd)))
     t = np.asarray(sol.time)
     dp = np.asarray(sol.deadline_prior)
     feas = np.asarray(sol.feasible)

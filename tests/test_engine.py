@@ -1,0 +1,132 @@
+"""ClusterEngine: seed-equivalence goldens and state-machine invariants.
+
+The golden numbers below were produced by the pre-engine (seed) scheduler
+implementation — the object-graph ``_PairState``/``_ServerState`` simulator
+and the heap-based offline packer — at commit 025555f, on fixed-seed task
+sets.  The vectorized ``ClusterEngine`` rewrite must reproduce them to
+1e-6 relative tolerance (it actually agrees to ~1e-10; the only divergence
+source is the batched theta-readjustment boundary solve).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import online, scheduling, tasks
+from repro.core.engine import ClusterEngine
+
+# (algorithm kwargs) -> (e_total, e_idle, n_pairs, n_servers, violations)
+# from the seed implementation on generate_offline(0.1, seed=3), l=2, θ=0.9.
+OFFLINE_GOLDEN = {
+    "edl":    (3678787.8404366914, 6735.9927449506595, 84, 42, 0),
+    "edf-wf": (3669301.5104696816, 18451.40813414862, 91, 46, 0),
+    "edf-bf": (3725938.3543846672, 75088.25204913408, 78, 39, 0),
+    "lpt-ff": (3708240.1715263743, 57390.069190841314, 114, 57, 0),
+}
+
+# from the seed implementation on generate_online(0.02, 0.05, seed=1,
+# horizon=200): (e_total, e_overhead, n_pairs, n_servers, violations).
+ONLINE_GOLDEN = {
+    ("edl", 2, 0.9): (2731797.7952474374, 6660.0, 74, 37, 0),
+    ("bin", 2, 0.9): (2736802.4581569973, 4500.0, 50, 25, 0),
+    ("edl", 4, 1.0): (2958601.729300437, 7920.0, 88, 22, 0),
+}
+
+
+@pytest.fixture(scope="module")
+def library():
+    return tasks.app_library()
+
+
+@pytest.mark.parametrize("alg", sorted(OFFLINE_GOLDEN))
+def test_offline_matches_seed_implementation(alg, library):
+    ts = tasks.generate_offline(0.1, seed=3, library=library)
+    r = scheduling.schedule_offline(ts, l=2, theta=0.9, algorithm=alg)
+    e_total, e_idle, n_pairs, n_servers, violations = OFFLINE_GOLDEN[alg]
+    assert r.e_total == pytest.approx(e_total, rel=1e-6)
+    assert r.e_idle == pytest.approx(e_idle, rel=1e-6)
+    assert r.n_pairs == n_pairs
+    assert r.n_servers == n_servers
+    assert r.violations == violations
+
+
+@pytest.mark.parametrize("alg,l,theta", sorted(ONLINE_GOLDEN))
+def test_online_matches_seed_implementation(alg, l, theta, library):
+    ts = tasks.generate_online(offline_util=0.02, online_util=0.05, seed=1,
+                               horizon=200, library=library)
+    r = online.schedule_online(ts, l=l, theta=theta, algorithm=alg)
+    e_total, e_overhead, n_pairs, n_servers, violations = \
+        ONLINE_GOLDEN[(alg, l, theta)]
+    assert r.e_total == pytest.approx(e_total, rel=1e-6)
+    assert r.e_overhead == pytest.approx(e_overhead, rel=1e-6)
+    assert r.n_pairs == n_pairs
+    assert r.n_servers == n_servers
+    assert r.violations == violations
+
+
+def test_kernel_path_matches_jnp_path_online():
+    """use_kernel=True routes Algorithm 1 AND the readjustment batch through
+    the Pallas kernel; schedule shape must agree with the jnp solver path."""
+    ts = tasks.generate_online(offline_util=0.02, online_util=0.04, seed=7,
+                               horizon=120)
+    r_j = online.schedule_online(ts, l=2, theta=0.9, algorithm="edl")
+    r_k = online.schedule_online(ts, l=2, theta=0.9, algorithm="edl",
+                                 use_kernel=True)
+    assert r_k.violations == 0
+    assert r_k.e_total == pytest.approx(r_j.e_total, rel=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# State-machine invariants.
+# ---------------------------------------------------------------------------
+
+
+def test_engine_drs_and_finalize():
+    eng = ClusterEngine(l=2, rho=2, p_idle=10.0, delta_on=5.0)
+    sid = eng.new_server(0.0)
+    assert eng.n_pairs == 2 and eng.n_on_servers() == 1
+    eng.assign(sid * 2, 0.0, 1.0)          # pair 0 busy on [0, 1]
+    eng.drs_sweep(2.0)                      # idle 1 < rho: stays on
+    assert eng.n_on_servers() == 1
+    eng.drs_sweep(3.0)                      # idle 2 >= rho: powers off
+    assert eng.n_on_servers() == 0
+    e_idle, e_over, n_srv = eng.finalize()
+    # on [0, 3] with l=2: 6 pair-slots, 1 busy -> 5 idle; 2 turn-ons
+    assert e_idle == pytest.approx(10.0 * 5.0)
+    assert e_over == pytest.approx(5.0 * 2)
+    assert n_srv == 1
+
+
+def test_engine_acquire_prefers_waking_off_server():
+    eng = ClusterEngine(l=2)
+    eng.new_server(0.0)
+    eng.drs_sweep(10.0)                     # server powers off
+    pid = eng.acquire_pair(10.0)            # re-wakes it instead of building
+    assert pid == 0
+    assert eng.n_servers == 1
+    assert eng.mu[0] == 10.0                # an awakened pair is free *now*
+
+
+def test_engine_offline_finalize_is_algorithm3():
+    from repro.core import cluster as cl
+    eng = ClusterEngine(l=2, servers=False, p_idle=37.0)
+    for mu in (5.0, 3.0, 8.0):
+        pid = eng.open_pair()
+        eng.assign(pid, 0.0, mu)
+    e_idle, e_over, n_srv = eng.finalize()
+    exp_idle, exp_srv = cl.offline_idle_energy(np.asarray([5.0, 3.0, 8.0]), 2)
+    assert e_idle == pytest.approx(exp_idle)
+    assert e_over == 0.0
+    assert n_srv == exp_srv
+
+
+def test_engine_selectors_tie_break_to_lowest_id():
+    eng = ClusterEngine(l=1)
+    for _ in range(3):
+        eng.new_server(0.0)
+    assert eng.worst_fit() == 0             # all mu equal -> lowest id
+    eng.assign(0, 0.0, 4.0)
+    eng.assign(1, 0.0, 2.0)
+    assert eng.worst_fit() == 2             # mu: [4, 2, 0]
+    assert eng.best_fit(0.0, 10.0, 1.0) == 0
+    assert eng.first_fit(0.0, 10.0, 7.0) == 1   # pair 0 does not fit
+    assert eng.first_fit(0.0, 3.0, 2.0) == 2

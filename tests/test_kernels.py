@@ -110,6 +110,62 @@ def test_dvfs_kernel_full_library():
     assert np.all(sol.time[ok] <= np.asarray(allowed)[ok] * (1 + 1e-4))
 
 
+def test_dvfs_kernel_narrow_interval():
+    """Kernel/oracle parity on the realistic NARROW (GTX-1080Ti) interval."""
+    from repro.core import dvfs
+
+    lib = tasklib.generate_offline(0.06, seed=21)
+    allowed = lib.deadline - lib.arrival
+    sol = ops.dvfs_solve(lib.params, allowed, interval=dvfs.NARROW)
+    tasks_mat = np.stack(
+        [np.asarray(f, np.float32) for f in lib.params.astuple()]
+        + [np.asarray(allowed, np.float32),
+           np.zeros(len(lib), np.float32)], axis=1)
+    expect = ref.dvfs_solve_ref(tasks_mat, interval=dvfs.NARROW)
+    rel = np.abs(sol.energy - expect[:, 5]) / expect[:, 5]
+    assert float(np.max(rel)) < 1e-2
+    assert float(np.mean(sol.deadline_prior == (expect[:, 6] > .5))) > 0.97
+    # solutions stay inside the NARROW box
+    assert np.all(sol.fm >= dvfs.NARROW.fm_min - 1e-5)
+    assert np.all(sol.fm <= dvfs.NARROW.fm_max + 1e-5)
+    assert np.all(sol.fc <= dvfs.NARROW.fc_max + 1e-4)
+
+
+def test_dvfs_kernel_readjust_path():
+    """The kernel's theta-readjustment sweep (column-7 flag) matches the
+    scalar ``single_task.readjust`` decisions within grid tolerance."""
+    from repro.core.dvfs import DvfsParams
+
+    from repro.core import dvfs
+
+    lib = tasklib.app_library()
+    rows = [lib[i] for i in range(8)]
+    params = DvfsParams.stack(rows)
+    tstar = np.asarray(params.default_time())
+    tmin = np.asarray(dvfs.min_time(params, dvfs.WIDE))
+    # feasible windows strictly below the default execution time (and hence
+    # below the optimal DVFS time): the theta-readjustment regime
+    windows = tmin + (tstar - tmin) * np.linspace(0.15, 0.9, 8)
+    sol = ops.dvfs_solve(params, windows, readjust=True)
+    for i in range(8):
+        v, fc, fm, t, p, e = ref.dvfs_solve_ref(
+            np.asarray([[*np.asarray(params[i].astuple(), np.float32),
+                         np.float32(windows[i]), 1.0]], np.float32))[0][:6]
+        assert abs(sol.energy[i] - e) / e < 1e-2
+        # both respect the shrunken window
+        assert sol.time[i] <= windows[i] * (1 + 1e-4)
+        assert t <= windows[i] * (1 + 1e-4)
+    # and the batched production path agrees with the scalar readjust
+    from repro.core import single_task
+    vb, fcb, fmb, tb, pb, eb = single_task.readjust_batch(
+        params, windows, use_kernel=True)
+    for i in range(8):
+        vs, fcs, fms, ts_, ps, es = single_task.readjust(
+            params[i], float(windows[i]))
+        assert abs(eb[i] - es) / es < 1e-2
+        assert tb[i] == pytest.approx(min(float(windows[i]), ts_), rel=1e-4)
+
+
 def test_dvfs_kernel_through_scheduler():
     """configure_tasks(use_kernel=True) plugs the Pallas solver into
     Algorithm 1 and must produce a near-identical schedule."""
