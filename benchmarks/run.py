@@ -33,6 +33,11 @@ def main(argv=None):
     from benchmarks import online_scheduling
     online_scheduling.main(["--full"] if args.full else [])
 
+    print("# --- S5 scenario grid (intervals x class mixes) ---", flush=True)
+    from benchmarks import scenario_sweep
+    scenario_sweep.run(utils=(0.2,), rhos=(2,), delta_scales=(1.0,),
+                       verbose=False)
+
     print("# --- Phi cost (S2.1 low-overhead claim) ---", flush=True)
     from benchmarks import scheduler_throughput
     scheduler_throughput.run(verbose=False)

@@ -13,8 +13,18 @@ The pipeline (DESIGN.md §2-3):
    scheduler the paper evaluates on GPU benchmark traces.
 3. Output: fleet energy saving vs the no-DVFS baseline, per-job settings.
 
+Homogeneous fleet (the default)::
+
     PYTHONPATH=src python examples/energy_sched_cluster.py \
         [--dryrun-dir results/dryrun] [--jobs 400]
+
+Heterogeneous fleet — schedule the same day across a machine-class mix
+from the ``repro.core.machines`` registry; the scheduler solves each job's
+DVFS optimum on every class and sends it to the min-energy feasible one
+(per-class assignment counts are printed at the end)::
+
+    PYTHONPATH=src python examples/energy_sched_cluster.py \
+        --classes gtx-1080ti,tpu-v5e,v100-sxm2
 
 Falls back to a representative synthetic roofline table if the dry-run
 JSONs are absent.
@@ -67,7 +77,12 @@ def main():
                     help="accelerator slices per power domain")
     ap.add_argument("--theta", type=float, default=0.9)
     ap.add_argument("--horizon", type=int, default=720)
+    ap.add_argument("--classes", default=None,
+                    help="comma-separated machine-class mix from the "
+                         "repro.core.machines registry, e.g. "
+                         "gtx-1080ti,tpu-v5e (default: homogeneous)")
     args = ap.parse_args()
+    mix = args.classes.split(",") if args.classes else None
 
     terms = load_roofline(args.dryrun_dir)
     print(f"[fleet] roofline table: {len(terms)} cells "
@@ -80,10 +95,14 @@ def main():
           f"[{deltas.min():.2f}, {deltas.max():.2f}] "
           f"(memory-bound decode ... compute-bound train)")
 
+    if mix:
+        print(f"[fleet] heterogeneous mix: {', '.join(mix)}")
     r_dvfs = online.schedule_online(ts, l=args.l, theta=args.theta,
-                                    algorithm="edl", use_dvfs=True)
+                                    algorithm="edl", use_dvfs=True,
+                                    classes=mix)
     r_base = online.schedule_online(ts, l=args.l, theta=1.0,
-                                    algorithm="edl", use_dvfs=False)
+                                    algorithm="edl", use_dvfs=False,
+                                    classes=mix)
     print(f"[fleet] no-DVFS  : E_run={r_base.e_run:.3e} "
           f"E_idle={r_base.e_idle:.3e} E_ovh={r_base.e_overhead:.3e} "
           f"(pairs={r_base.n_pairs})")
@@ -106,6 +125,13 @@ def main():
         rows = np.asarray(rows)
         print(f"    {cell:34s} fc={rows[:,0].mean():.2f} "
               f"fm={rows[:,1].mean():.2f} (n={len(rows)})")
+
+    if mix:
+        counts = np.bincount([a.class_id for a in r_dvfs.assignments],
+                             minlength=len(mix))
+        print("[fleet] jobs per machine class:")
+        for name, cnt in zip(mix, counts):
+            print(f"    {name:20s} {int(cnt)}")
 
 
 if __name__ == "__main__":

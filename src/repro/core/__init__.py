@@ -1,30 +1,43 @@
 """The paper's contribution: DVFS power/performance models, the single-task
-optimum, and the EDL theta-readjustment schedulers (offline + online),
-plus the accelerator-job adapter that feeds roofline-derived LM jobs into
-the same algorithms.
+optimum, and the EDL theta-readjustment schedulers (offline + online) over a
+heterogeneous cluster of machine classes, plus the accelerator-job adapter
+that feeds roofline-derived LM jobs into the same algorithms.
 
 Architecture (top to bottom)::
 
     policies            scheduling.schedule_offline / online.schedule_online
-                        (Algorithms 1-6: packing order + pair-selection rules)
+                        (Algorithms 1-6: packing order + pair-selection
+                        rules, min-energy-feasible class first)
+        |
+    machine classes     machines.MachineClass / REGISTRY - per-class task
+                        constants + scaling box; configure_classes runs
+                        Algorithm 1 on every class (one reference class ==
+                        the homogeneous paper setup, bit-for-bit)
         |
     ClusterEngine       engine.ClusterEngine - ONE vectorized pair/server
-                        state machine (numpy struct-of-arrays, DRS sweeps,
-                        worst/best/first-fit selectors, Eq. 6/7 finalizer)
+                        state machine (numpy struct-of-arrays with a per-pair
+                        class_id column, DRS sweeps, class-restricted
+                        worst/best/first-fit selectors, per-class Eq. 6/7
+                        finalizer)
         |
     DVFS solvers        single_task.configure_tasks / readjust_batch
                         (Algorithm 1; batched, padded to pow-2 shapes)
         |
     Pallas kernel       kernels/dvfs_opt.dvfs_solve_kernel - the use_kernel
-                        fast path: one [n, 8] task matrix per dispatch, grid
-                        sweeps in VMEM (incl. the theta-readjustment case)
+                        fast path: one [n, 16] task matrix per dispatch
+                        (per-row interval bounds -> all classes in one call),
+                        grid sweeps in VMEM (incl. the theta-readjustment
+                        case)
 
-See docs/ARCHITECTURE.md for the full picture.
+See docs/ARCHITECTURE.md for the full picture and docs/EQUATIONS.md for the
+equation/algorithm -> code map.
 """
 
-from repro.core import cluster, dvfs, engine, jobs, online, scheduling, single_task, tasks
+from repro.core import (cluster, dvfs, engine, jobs, machines, online,
+                        scheduling, single_task, tasks)
 from repro.core.dvfs import DvfsParams, ScalingInterval, NARROW, WIDE
 from repro.core.engine import ClusterEngine
+from repro.core.machines import REGISTRY, MachineClass
 from repro.core.online import schedule_online
 from repro.core.scheduling import schedule_offline
 from repro.core.single_task import configure_tasks, solve_unconstrained, solve_with_deadline
@@ -32,10 +45,10 @@ from repro.core.tasks import TaskSet, app_library, generate_offline, generate_on
 
 __all__ = [
     "DvfsParams", "ScalingInterval", "NARROW", "WIDE", "TaskSet",
-    "ClusterEngine",
+    "ClusterEngine", "MachineClass", "REGISTRY",
     "app_library", "generate_offline", "generate_online",
     "configure_tasks", "solve_unconstrained", "solve_with_deadline",
     "schedule_offline", "schedule_online",
-    "cluster", "dvfs", "engine", "jobs", "online", "scheduling",
+    "cluster", "dvfs", "engine", "jobs", "machines", "online", "scheduling",
     "single_task", "tasks",
 ]

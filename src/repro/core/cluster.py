@@ -19,9 +19,10 @@ The offline objective (Eq. 6) is the special case with no overhead term and
 servers that run from t=0 until their longest pair finishes (Algorithm 3
 groups pairs into servers after the mapping is fixed).
 
-The live cluster *state* (pair finish times, server on/off DRS bookkeeping)
-lives in :class:`repro.core.engine.ClusterEngine` — the single vectorized
-state machine shared by the offline and online schedulers.
+The live cluster *state* (pair finish times, server on/off DRS bookkeeping,
+per-pair machine class) lives in :class:`repro.core.engine.ClusterEngine` —
+the single vectorized state machine shared by the offline and online
+schedulers.  See docs/EQUATIONS.md for the equation/algorithm -> code map.
 """
 
 from __future__ import annotations
@@ -51,6 +52,7 @@ class Assignment:
     power: float
     energy: float
     readjusted: bool = False
+    class_id: int = 0   # machine class of the hosting pair (heterogeneity)
 
 
 @dataclasses.dataclass

@@ -23,6 +23,10 @@ Energy (Eq. 3/4)::
 All functions are written with ``jax.numpy`` so they can be vmapped/jitted
 and reused verbatim by the Pallas kernel oracle; they accept plain floats and
 numpy arrays as well (jnp broadcasts).
+
+See docs/EQUATIONS.md for the full equation/algorithm -> code map, and
+:mod:`repro.core.machines` for how these model constants are re-fitted per
+heterogeneous machine class.
 """
 
 from __future__ import annotations
@@ -86,6 +90,12 @@ class ScalingInterval:
     @property
     def fc_max(self) -> float:
         return g1_float(self.v_max)
+
+    def bounds(self) -> tuple:
+        """``(v_min, v_max, fc_min, fm_min, fm_max)`` — the per-row interval
+        columns 8-12 of the widened ``[n, 16]`` kernel task matrix (see
+        :mod:`repro.kernels.dvfs_opt`)."""
+        return (self.v_min, self.v_max, self.fc_min, self.fm_min, self.fm_max)
 
     def clamp(self, v: Array, fc: Array, fm: Array):
         v = jnp.clip(v, self.v_min, self.v_max)
@@ -199,7 +209,15 @@ def optimal_fm(params: DvfsParams, v: Array, fc: Array, interval: ScalingInterva
 # The scheduler's task abstraction is hardware-agnostic; these constants give
 # the fleet simulation a v5e-class flavour when scheduling LM jobs whose delta
 # comes from the roofline analysis.  Normalized exactly like the GPU numbers.
+# They back the ``tpu-v5e`` machine class in :mod:`repro.core.machines`,
+# which makes them a first-class pair class in the heterogeneous engine.
 # ---------------------------------------------------------------------------
+
+# Normalized DVFS box of the v5e-class part: a narrower voltage range than
+# the analytic GPU interval (server silicon is binned tighter) with HBM
+# frequency scaling down to 0.6 of nominal.
+TPU_V5E_INTERVAL = ScalingInterval(v_min=0.7, v_max=1.1, fc_min=0.6,
+                                   fm_min=0.6, fm_max=1.05)
 
 TPU_V5E_CHIP = dict(
     # Peak board power envelope per chip (W), static + host share, HBM share,

@@ -1,32 +1,46 @@
 """Vectorized cluster state machine shared by every scheduler (§3.1.2, §4.2).
 
 ``ClusterEngine`` is the single source of truth for cluster state: pair
-finish times (``mu``) and cumulative busy time are flat numpy arrays, and
-server DRS bookkeeping (on/off, powered-on duration, turn-on counts) is a
-parallel set of arrays with pairs laid out contiguously per server
-(``server j`` owns pairs ``[j*l, (j+1)*l)``).  The offline (Algorithms 1-3)
-and online (Algorithms 4-6) schedulers in :mod:`repro.core.scheduling` and
-:mod:`repro.core.online` are thin policy layers over this engine: they pick
-pairs via the vectorized ``worst_fit`` / ``best_fit`` / ``first_fit``
-selectors and never touch the arrays directly.
+finish times (``mu``), cumulative busy time and the pair's *machine class*
+are flat numpy arrays, and server DRS bookkeeping (on/off, powered-on
+duration, turn-on counts, server class) is a parallel set of arrays with
+pairs laid out contiguously per server (``server j`` owns pairs
+``[j*l, (j+1)*l)``).  Servers are class-homogeneous: every pair of a server
+shares its ``class_id``, so the DRS sweep and the Eq. (7) sums naturally
+operate per class.  The offline (Algorithms 1-3) and online (Algorithms
+4-6) schedulers in :mod:`repro.core.scheduling` and :mod:`repro.core.online`
+are thin policy layers over this engine: they pick pairs via the vectorized
+``worst_fit`` / ``best_fit`` / ``first_fit`` selectors (optionally
+restricted to one class) and never touch the arrays directly.
+
+Heterogeneity: pass ``classes`` (a sequence of
+:class:`repro.core.machines.MachineClass`, or any objects with ``p_idle``
+and ``delta_on`` attributes) and open pairs/servers with a ``class_id``.
+With the default single class the engine reduces exactly to the homogeneous
+paper setup (scalar ``p_idle``/``delta_on``).
 
 Two operating modes share the arrays and the Eq. (7) finalizer:
 
 * ``servers=False`` (offline): pairs are opened on demand with no live
-  server bookkeeping; :meth:`finalize` runs Algorithm 3 — sort pairs by
-  finish time, group ``l`` consecutive pairs into a *virtual* server whose
-  powered-on span is its longest pair — and then evaluates the same
-  Eq. (7) sum with ``omega = 0``, which is exactly Eq. (6).
+  server bookkeeping; :meth:`finalize` runs Algorithm 3 — per class, sort
+  pairs by finish time, group ``l`` consecutive pairs into a *virtual*
+  server whose powered-on span is its longest pair — and then evaluates the
+  same Eq. (7) sum with ``omega = 0``, which is exactly Eq. (6).
 * ``servers=True`` (online): pairs come in server granules of ``l``; the
   DRS sweep powers a server off once all of its pairs have been idle for
   ``rho`` slots, and every power-on adds ``l`` to the turn-on count
-  ``omega``.  :meth:`finalize` powers off the stragglers and returns
+  ``omega``.  :meth:`finalize` powers off the stragglers and returns (per
+  class ``k``)
 
-      E_idle     = P_idle * (sum_j on_time_j * l - sum_k busy_k)
-      E_overhead = Delta * omega.
+      E_idle     = sum_k P_idle[k] * (sum_j on_time_jk * l - sum busy_k)
+      E_overhead = sum_k Delta[k] * omega_k.
+
+See docs/EQUATIONS.md for the full equation/algorithm -> code map.
 """
 
 from __future__ import annotations
+
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -35,27 +49,49 @@ from repro.core import cluster as cl
 _EPS = 1e-9
 
 
+class _DefaultClass:
+    """Scalar-parameter stand-in when no machine classes are given."""
+
+    __slots__ = ("name", "p_idle", "delta_on")
+
+    def __init__(self, p_idle: float, delta_on: float):
+        self.name = "default"
+        self.p_idle = p_idle
+        self.delta_on = delta_on
+
+
 class ClusterEngine:
     """Struct-of-arrays pair/server state with vectorized policy selectors."""
 
     def __init__(self, l: int, *, servers: bool = True, rho: int = cl.RHO,
                  p_idle: float = cl.P_IDLE, delta_on: float = cl.DELTA_ON,
-                 max_pairs: int = cl.MAX_PAIRS):
+                 max_pairs: int = cl.MAX_PAIRS, classes: Sequence = None):
         self.l = int(l)
         self.server_mode = bool(servers)
         self.rho = rho
-        self.p_idle = p_idle
-        self.delta_on = delta_on
+        self.classes = tuple(classes) if classes is not None \
+            else (_DefaultClass(p_idle, delta_on),)
         self.max_pairs = max_pairs
         self.n_pairs = 0
         self.n_servers = 0
         cap_p, cap_s = 64, 16
         self._mu = np.zeros(cap_p)
         self._busy = np.zeros(cap_p)
+        self._cls = np.zeros(cap_p, dtype=np.int64)
         self._on = np.zeros(cap_s, dtype=bool)
         self._on_since = np.zeros(cap_s)
         self._on_time = np.zeros(cap_s)
         self._turn_ons = np.zeros(cap_s, dtype=np.int64)
+        self._srv_cls = np.zeros(cap_s, dtype=np.int64)
+
+    # Back-compat scalar views (meaningful for the single-class engine).
+    @property
+    def p_idle(self) -> float:
+        return self.classes[0].p_idle
+
+    @property
+    def delta_on(self) -> float:
+        return self.classes[0].delta_on
 
     # -- array views ---------------------------------------------------------
     @property
@@ -67,6 +103,11 @@ class ClusterEngine:
     def busy(self) -> np.ndarray:
         """Cumulative busy duration per pair, shape ``[n_pairs]``."""
         return self._busy[: self.n_pairs]
+
+    @property
+    def pair_class(self) -> np.ndarray:
+        """Machine-class id per pair, shape ``[n_pairs]``."""
+        return self._cls[: self.n_pairs]
 
     @property
     def feasible_pairs(self) -> bool:
@@ -81,9 +122,10 @@ class ClusterEngine:
         if need <= self._mu.shape[0]:
             return
         cap = max(need, 2 * self._mu.shape[0])
-        self._mu = np.concatenate([self._mu, np.zeros(cap - self._mu.shape[0])])
-        self._busy = np.concatenate([self._busy,
-                                     np.zeros(cap - self._busy.shape[0])])
+        pad = cap - self._mu.shape[0]
+        self._mu = np.concatenate([self._mu, np.zeros(pad)])
+        self._busy = np.concatenate([self._busy, np.zeros(pad)])
+        self._cls = np.concatenate([self._cls, np.zeros(pad, dtype=np.int64)])
 
     def _grow_servers(self, extra: int):
         need = self.n_servers + extra
@@ -96,19 +138,22 @@ class ClusterEngine:
         self._on_time = np.concatenate([self._on_time, np.zeros(pad)])
         self._turn_ons = np.concatenate([self._turn_ons,
                                          np.zeros(pad, dtype=np.int64)])
+        self._srv_cls = np.concatenate([self._srv_cls,
+                                        np.zeros(pad, dtype=np.int64)])
 
     # -- transitions ---------------------------------------------------------
-    def open_pair(self, mu0: float = 0.0) -> int:
+    def open_pair(self, mu0: float = 0.0, class_id: int = 0) -> int:
         """A fresh standalone pair (offline mode: no server bookkeeping)."""
         assert not self.server_mode
         self._grow_pairs(1)
         pid = self.n_pairs
         self._mu[pid] = mu0
         self._busy[pid] = 0.0
+        self._cls[pid] = class_id
         self.n_pairs += 1
         return pid
 
-    def new_server(self, t: float) -> int:
+    def new_server(self, t: float, class_id: int = 0) -> int:
         """Build and power on a server of ``l`` fresh pairs; returns its id."""
         assert self.server_mode
         self._grow_servers(1)
@@ -117,9 +162,11 @@ class ClusterEngine:
         self._on[sid] = True
         self._on_since[sid] = t
         self._turn_ons[sid] = self.l
+        self._srv_cls[sid] = class_id
         lo = self.n_pairs
         self._mu[lo: lo + self.l] = t   # a fresh pair is free *now*
         self._busy[lo: lo + self.l] = 0.0
+        self._cls[lo: lo + self.l] = class_id
         self.n_servers += 1
         self.n_pairs += self.l
         return sid
@@ -130,14 +177,16 @@ class ClusterEngine:
         self._turn_ons[sid] += self.l
         self._mu[sid * self.l: (sid + 1) * self.l] = t
 
-    def acquire_pair(self, t: float) -> int:
-        """A fresh pair: prefer re-powering an off server over building one."""
-        off = np.flatnonzero(~self._on[: self.n_servers])
+    def acquire_pair(self, t: float, class_id: int = 0) -> int:
+        """A fresh pair of ``class_id``: prefer re-powering an off server of
+        that class over building a new one."""
+        off = np.flatnonzero(~self._on[: self.n_servers]
+                             & (self._srv_cls[: self.n_servers] == class_id))
         if off.size:
             sid = int(off[0])
             self.wake_server(sid, t)
         else:
-            sid = self.new_server(t)
+            sid = self.new_server(t, class_id)
         return sid * self.l
 
     def assign(self, pid: int, start: float, duration: float):
@@ -157,45 +206,53 @@ class ClusterEngine:
             self._on[: ns][off] = False
 
     # -- pair selection (the policy rules' vectorized primitives) ------------
-    def eligible_mask(self):
+    def eligible_mask(self, class_id: Optional[int] = None):
         """Mask of assignable pairs (``None`` == all): every pair offline,
-        only pairs of powered-on servers online."""
-        if not self.server_mode:
-            return None
-        return np.repeat(self._on[: self.n_servers], self.l)
+        only pairs of powered-on servers online; restricted to one machine
+        class when ``class_id`` is given."""
+        mask = None
+        if self.server_mode:
+            mask = np.repeat(self._on[: self.n_servers], self.l)
+        if class_id is not None and len(self.classes) > 1:
+            cmask = self._cls[: self.n_pairs] == class_id
+            mask = cmask if mask is None else (mask & cmask)
+        return mask
 
-    def worst_fit(self) -> int:
+    def worst_fit(self, class_id: Optional[int] = None) -> int:
         """The pair with the smallest mu (SPT; ties -> smallest id), or -1."""
         if self.n_pairs == 0:
             return -1
         mu = self.mu
-        mask = self.eligible_mask()
+        mask = self.eligible_mask(class_id)
         if mask is None:
             return int(np.argmin(mu))
         if not mask.any():
             return -1
         return int(np.argmin(np.where(mask, mu, np.inf)))
 
-    def _fits(self, t_now: float, deadline: float, t_hat: float):
+    def _fits(self, t_now: float, deadline: float, t_hat: float,
+              class_id: Optional[int] = None):
         mu = self.mu
         fit = deadline - np.maximum(t_now, mu) >= t_hat - _EPS
-        mask = self.eligible_mask()
+        mask = self.eligible_mask(class_id)
         return fit if mask is None else (fit & mask)
 
-    def best_fit(self, t_now: float, deadline: float, t_hat: float) -> int:
+    def best_fit(self, t_now: float, deadline: float, t_hat: float,
+                 class_id: Optional[int] = None) -> int:
         """The *fitting* pair with the largest mu (tightest fit), or -1."""
         if self.n_pairs == 0:
             return -1
-        fit = self._fits(t_now, deadline, t_hat)
+        fit = self._fits(t_now, deadline, t_hat, class_id)
         if not fit.any():
             return -1
         return int(np.argmax(np.where(fit, self.mu, -np.inf)))
 
-    def first_fit(self, t_now: float, deadline: float, t_hat: float) -> int:
+    def first_fit(self, t_now: float, deadline: float, t_hat: float,
+                  class_id: Optional[int] = None) -> int:
         """The lowest-id fitting pair, or -1."""
         if self.n_pairs == 0:
             return -1
-        fit = self._fits(t_now, deadline, t_hat)
+        fit = self._fits(t_now, deadline, t_hat, class_id)
         if not fit.any():
             return -1
         return int(np.argmax(fit))
@@ -203,19 +260,27 @@ class ClusterEngine:
     # -- Eq. (7) finalizer ---------------------------------------------------
     def _energy(self):
         ns = self.n_servers
-        e_idle = self.p_idle * (float(self._on_time[:ns].sum()) * self.l
-                                - float(self.busy.sum()))
-        e_overhead = self.delta_on * float(self._turn_ons[:ns].sum())
+        srv_cls = self._srv_cls[:ns]
+        pair_cls = self._cls[: self.n_pairs]
+        e_idle = 0.0
+        e_overhead = 0.0
+        for k, mc in enumerate(self.classes):
+            sm = srv_cls == k
+            pm = pair_cls == k
+            e_idle += mc.p_idle * (float(self._on_time[:ns][sm].sum()) * self.l
+                                   - float(self.busy[pm].sum()))
+            e_overhead += mc.delta_on * float(self._turn_ons[:ns][sm].sum())
         return e_idle, e_overhead
 
     def finalize(self):
         """Close the books: returns ``(e_idle, e_overhead, n_servers)``.
 
         Online mode powers off the remaining servers ``rho`` slots after
-        their last pair frees up; offline mode first runs Algorithm 3 to
-        group the standalone pairs into virtual servers (powered on for
-        exactly their longest pair's span).  Both then evaluate the same
-        Eq. (7) idle/overhead sums over the server arrays.
+        their last pair frees up; offline mode first runs Algorithm 3 per
+        class to group the standalone pairs into (class-homogeneous) virtual
+        servers, powered on for exactly their longest pair's span.  Both
+        then evaluate the same Eq. (7) idle/overhead sums over the server
+        arrays with per-class ``p_idle``/``delta_on``.
         """
         if self.server_mode:
             ns = self.n_servers
@@ -226,14 +291,24 @@ class ClusterEngine:
                                             - self._on_since[: ns][on])
                 self._on[: ns] = False
         elif self.n_pairs:
-            # Algorithm 3: each virtual server is powered on for exactly its
-            # longest pair's span.
-            spans = cl.server_spans(self.mu, self.l)
+            # Algorithm 3 per class: each virtual server is powered on for
+            # exactly its longest pair's span (servers never mix classes).
+            pair_cls = self._cls[: self.n_pairs]
+            spans, span_cls = [], []
+            for k in range(len(self.classes)):
+                mu_k = self.mu[pair_cls == k]
+                if mu_k.size:
+                    s = cl.server_spans(mu_k, self.l)
+                    spans.append(s)
+                    span_cls.append(np.full(s.shape[0], k, dtype=np.int64))
+            spans = np.concatenate(spans) if spans else np.zeros(0)
             ns = spans.shape[0]
             self._grow_servers(ns)
             self._on_time[:ns] = spans
             self._turn_ons[:ns] = 0
             self._on[:ns] = False
+            self._srv_cls[:ns] = np.concatenate(span_cls) if span_cls \
+                else np.zeros(0, dtype=np.int64)
             self.n_servers = ns
         e_idle, e_overhead = self._energy()
         return e_idle, e_overhead, self.n_servers

@@ -1,0 +1,268 @@
+"""Heterogeneous machine classes: the per-pair-class layer of the cluster.
+
+The paper's premise is a *heterogeneous* CPU-GPU cluster — pairs whose
+accelerators have different power/frequency curves.  A
+:class:`MachineClass` captures one device class as a transform of the
+canonical GTX-1080Ti-fit task parameters (:mod:`repro.core.tasks`) plus its
+own DVFS scaling box:
+
+* ``speed``        — relative throughput: both time components (``D``,
+                     ``t0``) are divided by it;
+* ``power_scale``  — power envelope relative to the reference part;
+* ``p0_frac`` / ``gamma_frac`` — optional re-split of the scaled default
+                     power ``P*`` into static / memory / core shares (the
+                     way :func:`repro.core.dvfs.tpu_task_params` derives a
+                     chip's split from its envelope);
+* ``interval``     — the class's own :class:`~repro.core.dvfs.ScalingInterval`
+                     (``None`` = follow the run-level interval, the
+                     reference-class behaviour);
+* ``p_idle`` / ``delta_on`` — per-class idle power and turn-on overhead
+                     used by the :class:`~repro.core.engine.ClusterEngine`
+                     finalizers (Eq. 6/7 per class).
+
+The **reference class** (``gtx-1080ti``) is the identity transform: with a
+single reference class every scheduler degenerates bit-for-bit to the
+homogeneous code path (pinned by ``tests/test_machines.py`` against the
+``tests/test_engine.py`` goldens).
+
+:func:`configure_classes` runs Algorithm 1 for every task **on every
+class**: with ``use_kernel=True`` all ``C x n`` solves go through ONE
+widened ``[C*n, 16]`` Pallas dispatch whose rows carry their own interval
+bounds (columns 8-12, see :mod:`repro.kernels.dvfs_opt`); otherwise one
+jitted batched solve per class.  The schedulers then pick, per task, the
+min-energy *feasible* class first and fall back through the remaining
+classes in ascending energy order (see docs/EQUATIONS.md for the
+equation/algorithm map).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import cluster as cl
+from repro.core import dvfs, single_task
+from repro.core.dvfs import DvfsParams, ScalingInterval
+from repro.core.single_task import TaskConfig
+
+_EPS = 1e-9
+INFEASIBLE_PENALTY = 1e30  # pushes infeasible classes behind feasible ones
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineClass:
+    """One accelerator pair class: a parameter transform + a DVFS box."""
+
+    name: str
+    interval: Optional[ScalingInterval] = None  # None -> run-level interval
+    speed: float = 1.0
+    power_scale: float = 1.0
+    p0_frac: Optional[float] = None
+    gamma_frac: Optional[float] = None
+    p_idle: float = cl.P_IDLE
+    delta_on: float = cl.DELTA_ON
+
+    @property
+    def is_reference(self) -> bool:
+        """True if :meth:`adapt` is the identity transform."""
+        return (self.speed == 1.0 and self.power_scale == 1.0
+                and self.p0_frac is None and self.gamma_frac is None)
+
+    def effective_interval(self, default: ScalingInterval) -> ScalingInterval:
+        return self.interval if self.interval is not None else default
+
+    def adapt(self, params: DvfsParams) -> DvfsParams:
+        """Class-specific task constants from the reference (1080Ti) fit.
+
+        The identity class returns values bit-identical to its input
+        (``x * 1.0`` and ``x / 1.0`` are exact in IEEE-754), which is what
+        lets a single-reference-class run reproduce the homogeneous goldens
+        exactly.
+        """
+        p0, gamma, c, big_d, delta, t0 = (
+            np.asarray(f, np.float64) for f in params.astuple())
+        if self.p0_frac is not None or self.gamma_frac is not None:
+            if self.p0_frac is None or self.gamma_frac is None:
+                raise ValueError(f"{self.name}: p0_frac and gamma_frac must "
+                                 "be set together")
+            p_star = (p0 + gamma + c) * self.power_scale
+            p0 = p_star * self.p0_frac
+            gamma = p_star * self.gamma_frac
+            c = p_star - p0 - gamma
+        else:
+            p0 = p0 * self.power_scale
+            gamma = gamma * self.power_scale
+            c = c * self.power_scale
+        return DvfsParams(p0=p0, gamma=gamma, c=c, big_d=big_d / self.speed,
+                          delta=delta, t0=t0 / self.speed)
+
+
+# ---------------------------------------------------------------------------
+# Registry (the class mixes the scenario sweep iterates over).
+# ---------------------------------------------------------------------------
+
+#: Reference power envelope (W): mid of the paper's fitted P* range
+#: [175, 206] for the GTX-1080Ti library — the denominator every other
+#: class's ``power_scale`` is expressed against.
+REF_P_PEAK = 190.0
+
+#: The canonical class: the GTX-1080Ti the paper's 20-app library was fitted
+#: on.  Identity transform; its interval follows the run-level choice
+#: (WIDE analytic / NARROW realistic).
+GTX_1080TI = MachineClass("gtx-1080ti")
+
+#: The v5e-class accelerator from the chip envelope constants in
+#: :mod:`repro.core.dvfs`: ~200 W peak split 30/15/55 static/HBM/core,
+#: ~35% faster per task than the reference part, with its own tighter box.
+TPU_V5E = MachineClass(
+    "tpu-v5e",
+    interval=dvfs.TPU_V5E_INTERVAL,
+    speed=1.35,
+    power_scale=dvfs.TPU_V5E_CHIP["p_peak"] / REF_P_PEAK,
+    p0_frac=dvfs.TPU_V5E_CHIP["p0_frac"],
+    gamma_frac=dvfs.TPU_V5E_CHIP["gamma_frac"],
+    p_idle=dvfs.TPU_V5E_CHIP["p_idle"],
+    delta_on=dvfs.TPU_V5E_CHIP["delta_on"],
+)
+
+#: A Volta-class datacenter GPU: ~250 W envelope, ~1.5x the reference
+#: throughput, a slightly wider voltage floor than the 1080Ti's NARROW box
+#: (fit ranges in the style of the paper's published table).
+V100_SXM2 = MachineClass(
+    "v100-sxm2",
+    interval=ScalingInterval(v_min=0.75, v_max=1.2, fc_min=0.55,
+                             fm_min=0.65, fm_max=1.1),
+    speed=1.5,
+    power_scale=250.0 / REF_P_PEAK,
+    p0_frac=0.35,
+    gamma_frac=0.18,
+    p_idle=45.0,
+    delta_on=110.0,
+)
+
+REGISTRY = {c.name: c for c in (GTX_1080TI, TPU_V5E, V100_SXM2)}
+
+ClassSpec = Union[str, MachineClass]
+
+
+def get_classes(names: Sequence[ClassSpec]) -> Tuple[MachineClass, ...]:
+    """Resolve a class mix: registry names and/or MachineClass instances."""
+    out = []
+    for item in names:
+        if isinstance(item, MachineClass):
+            out.append(item)
+        elif item in REGISTRY:
+            out.append(REGISTRY[item])
+        else:
+            raise KeyError(f"unknown machine class {item!r}; registry has "
+                           f"{sorted(REGISTRY)}")
+    if not out:
+        raise ValueError("a class mix needs at least one machine class")
+    return tuple(out)
+
+
+def reference_classes(p_idle: float = cl.P_IDLE,
+                      delta_on: float = cl.DELTA_ON) -> Tuple[MachineClass, ...]:
+    """The homogeneous degenerate case: one identity class with the
+    engine-scalar idle/overhead constants."""
+    return (MachineClass("default", p_idle=p_idle, delta_on=delta_on),)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 across classes.
+# ---------------------------------------------------------------------------
+
+
+def configure_classes(params: DvfsParams, allowed: np.ndarray,
+                      classes: Sequence[MachineClass],
+                      interval: ScalingInterval = dvfs.WIDE,
+                      use_kernel: bool = False) -> List[TaskConfig]:
+    """Algorithm 1 for every task on every class: ``C`` TaskConfigs of ``n``.
+
+    ``use_kernel=True`` fuses all ``C x n`` solves into ONE widened Pallas
+    dispatch — the class blocks are stacked into a ``[C*n, 16]`` task matrix
+    whose rows carry their class's interval bounds.  The jnp path runs one
+    batched ``configure_tasks`` per class (each interval compiles once).
+    """
+    allowed = np.asarray(allowed, dtype=np.float64)
+    if not use_kernel:
+        return [single_task.configure_tasks(
+                    mc.adapt(params), allowed, mc.effective_interval(interval),
+                    use_kernel=False)
+                for mc in classes]
+
+    from repro.kernels import ops as kernel_ops
+
+    n = allowed.shape[0]
+    adapted = [mc.adapt(params) for mc in classes]
+    ivs = [mc.effective_interval(interval) for mc in classes]
+    big = DvfsParams(*(np.concatenate([np.asarray(f, np.float64)
+                                       for f in cols])
+                       for cols in zip(*(a.astuple() for a in adapted))))
+    allowed_rep = np.tile(allowed, len(classes))
+    interval_rows = np.concatenate(
+        [np.broadcast_to(np.asarray(iv.bounds(), np.float64), (n, 5))
+         for iv in ivs], axis=0)
+    big, allowed_rep, interval_rows, _ = single_task.pad_pow2(
+        big, allowed_rep, interval_rows)
+    sol = kernel_ops.dvfs_solve(big, allowed_rep, interval,
+                                interval_rows=interval_rows)
+    cfgs: List[TaskConfig] = []
+    for c, (a, iv) in enumerate(zip(adapted, ivs)):
+        sol_c = type(sol)(*(np.asarray(f)[c * n: (c + 1) * n] for f in sol))
+        cfgs.append(single_task.config_from_solution(sol_c, a, allowed, iv))
+    return cfgs
+
+
+def default_configs(task_set, classes: Sequence[MachineClass]) -> List[TaskConfig]:
+    """The no-DVFS configuration per class: every task at (1, 1, 1) with the
+    class-adapted constants (generalizes ``scheduling.default_config``)."""
+    allowed = np.asarray(task_set.deadline - task_set.arrival, np.float64)
+    out: List[TaskConfig] = []
+    for mc in classes:
+        a = mc.adapt(task_set.params)
+        t_star = np.asarray(a.default_time())
+        p_star = np.asarray(a.default_power())
+        ones = np.ones(t_star.shape[0])
+        out.append(TaskConfig(
+            v=ones.copy(), fc=ones.copy(), fm=ones.copy(),
+            t_hat=t_star.copy(), p_hat=p_star.copy(), e_hat=p_star * t_star,
+            t_min=t_star.copy(),
+            deadline_prior=(t_star > allowed + _EPS),
+            feasible=(t_star <= allowed + _EPS),
+            n_deadline_prior=int(np.sum(t_star > allowed + _EPS))))
+    return out
+
+
+def class_order(cfgs: Sequence[TaskConfig]) -> np.ndarray:
+    """Per-task class preference, shape ``[C, n]``: feasible classes in
+    ascending optimized energy first, then infeasible ones by energy.
+    ``class_order(cfgs)[0]`` is each task's *primary* class."""
+    e = np.stack([np.asarray(c.e_hat, np.float64) for c in cfgs])
+    feas = np.stack([np.asarray(c.feasible, bool) for c in cfgs])
+    key = np.where(feas, e, e + INFEASIBLE_PENALTY)
+    return np.argsort(key, axis=0, kind="stable")
+
+
+def readjust_classes(params: DvfsParams, rows: np.ndarray, windows: np.ndarray,
+                     class_ids: np.ndarray, classes: Sequence[MachineClass],
+                     interval: ScalingInterval, use_kernel: bool):
+    """Batched θ-readjustment across classes: one deadline-boundary dispatch
+    per class present in ``class_ids`` (≤ C dispatches per run).
+
+    Returns ``(v, fc, fm, t, p, e)`` arrays aligned with ``rows``.
+    """
+    n = rows.shape[0]
+    v, fc, fm, t, p, e = (np.zeros(n) for _ in range(6))
+    for cid in np.unique(class_ids):
+        mc = classes[int(cid)]
+        m = class_ids == cid
+        sub = mc.adapt(params[rows[m]])
+        out = single_task.readjust_batch(sub, windows[m],
+                                         mc.effective_interval(interval),
+                                         use_kernel=use_kernel)
+        for dst, src in zip((v, fc, fm, t, p, e), out):
+            dst[m] = src
+    return v, fc, fm, t, p, e

@@ -8,45 +8,54 @@ tasks arrive at slots ``T >= 1``.  Each slot the simulator
 1. *processes leaving tasks* - pairs whose last task finished become idle;
 2. *turns servers off* (DRS) - a server is powered off once **all** of its
    pairs have been idle for at least ``rho`` slots, paying no further idle
-   power but incurring a ``Delta``-per-pair overhead on the next power-on;
+   power but incurring a per-class ``Delta``-per-pair overhead on the next
+   power-on (servers are class-homogeneous, so the sweep operates per
+   class by construction);
 3. *assigns newly arrived tasks* (Algorithm 5) - per-task optimal DVFS
-   configuration first (deadline-aware), then EDF order; each task goes to
-   the ON pair with the shortest processing time if it fits, else a
-   theta-readjustment shrinks its execution window, else a fresh server is
-   powered on.
+   configuration first (deadline-aware, on every machine class), then EDF
+   order; each task tries its classes min-energy-feasible first and goes
+   to the ON pair of that class with the shortest processing time if it
+   fits, else a theta-readjustment shrinks its execution window, else the
+   next class; a task no class can host powers on a fresh server of its
+   primary class.
 
 The bin-packing baseline (Algorithm 6) replaces the pair-selection rule with
 worst-fit on utilization for the offline batch and first-fit for online
 arrivals, with no readjustment - the heuristic used by Liu et al. [41].
 
 Cluster state lives in :class:`~repro.core.engine.ClusterEngine` (the same
-vectorized pair/server arrays the offline scheduler packs into), and the
-per-task DVFS solves are batched: a task's slot-relative window
-``d - floor(a)`` is known before the simulation starts, so Algorithm 1 runs
-ONCE for the whole horizon (one ``pallas_call`` with ``use_kernel=True``),
-and the theta-readjustment re-solves — whose windows only pin finish times,
-never the packing decisions — are deferred and batch-solved in one more
-dispatch at the end (``single_task.readjust_batch``).
+vectorized pair/server arrays the offline scheduler packs into, including
+the per-pair ``class_id`` column), and the per-task DVFS solves are
+batched: a task's slot-relative window ``d - floor(a)`` is known before the
+simulation starts, so Algorithm 1 runs ONCE for the whole horizon and every
+class (one widened ``pallas_call`` with ``use_kernel=True``), and the
+theta-readjustment re-solves — whose windows only pin finish times, never
+the packing decisions — are deferred and batch-solved per class at the end
+(``single_task.readjust_batch``).
 
-Energy accounting follows Eq. (7):
+Energy accounting follows Eq. (7) with per-class constants:
 
     E_total = E_run + E_idle + E_overhead
-            = sum_i P_i (mu_i - kappa_i) + P_idle * sum idle periods
-              + Delta * (number of pair turn-ons)
+            = sum_i P_i (mu_i - kappa_i)
+              + sum_k P_idle[k] * idle periods of class k
+              + sum_k Delta[k] * (class-k pair turn-ons)
+
+See docs/EQUATIONS.md for the full equation/algorithm -> code map.
 """
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 
 from repro.core import cluster as cl
-from repro.core import dvfs, single_task
+from repro.core import dvfs, machines
 from repro.core.dvfs import ScalingInterval
 from repro.core.engine import ClusterEngine
-from repro.core.scheduling import (count_violations, default_config,
-                                   fill_readjusted, make_assignment)
+from repro.core.scheduling import (PendingRow, chosen_feasibility,
+                                   count_violations, fill_readjusted,
+                                   make_assignment)
 from repro.core.single_task import TaskConfig
 from repro.core.tasks import TaskSet
 
@@ -65,34 +74,42 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                     interval: ScalingInterval = dvfs.WIDE,
                     rho: int = cl.RHO, p_idle: float = cl.P_IDLE,
                     delta_on: float = cl.DELTA_ON,
-                    use_kernel: bool = False) -> cl.ScheduleResult:
+                    use_kernel: bool = False,
+                    classes=None) -> cl.ScheduleResult:
     """Run the online simulation end to end (Algorithms 4-6).
 
     ``algorithm`` is ``"edl"`` (Algorithm 5, SPT + theta-readjustment) or
     ``"bin"`` (Algorithm 6, worst-fit utilization for the offline batch then
-    first-fit online).
+    first-fit online).  ``classes`` selects the machine-class mix (``None``
+    = the homogeneous paper setup with the scalar ``p_idle``/``delta_on``;
+    with a mix, idle power and turn-on overhead come from each class).
     """
     algorithm = algorithm.lower()
     if algorithm not in ("edl", "bin"):
         raise ValueError(f"unknown online algorithm {algorithm!r}")
+    mcs = machines.reference_classes(p_idle=p_idle, delta_on=delta_on) \
+        if classes is None else machines.get_classes(classes)
 
+    n = len(task_set)
     deadline = np.asarray(task_set.deadline, dtype=np.float64)
     arrival = np.asarray(task_set.arrival, dtype=np.float64)
 
-    # Algorithm 1 (Alg 5, lines 1-4) for the WHOLE horizon in one batch: the
-    # per-task window d - T is fixed by the arrival slot, so nothing forces a
-    # per-slot solve.  With use_kernel=True this is a single pallas_call.
+    # Algorithm 1 (Alg 5, lines 1-4) for the WHOLE horizon and EVERY class
+    # in one batch: the per-task window d - T is fixed by the arrival slot,
+    # so nothing forces a per-slot solve.  With use_kernel=True this is a
+    # single widened pallas_call covering all classes.
     if use_dvfs:
         allowed = deadline - arrival.astype(np.int64).astype(np.float64)
-        cfg = single_task.configure_tasks(task_set.params, allowed, interval,
-                                          use_kernel=use_kernel)
+        cfgs = machines.configure_classes(task_set.params, allowed, mcs,
+                                          interval, use_kernel=use_kernel)
     else:
-        cfg = default_config(task_set)
+        cfgs = machines.default_configs(task_set, mcs)
+    order_cls = machines.class_order(cfgs)          # [C, n]
+    primary = order_cls[0]
 
-    eng = ClusterEngine(l, servers=True, rho=rho, p_idle=p_idle,
-                        delta_on=delta_on)
+    eng = ClusterEngine(l, servers=True, rho=rho, classes=mcs)
     assignments: List[cl.Assignment] = []
-    pending: List[Tuple[int, int, float]] = []
+    pending: List[PendingRow] = []
 
     for slot, idx in _slot_groups(task_set):
         t_now = float(slot)
@@ -102,53 +119,66 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
 
         if algorithm == "bin" and slot == 0:
             # Algorithm 6 offline phase: worst-fit on task utilization.
-            _binpack_offline(eng, deadline, idx, order, cfg, t_now,
-                             assignments)
+            _binpack_offline(eng, deadline, idx, order, cfgs, order_cls,
+                             primary, t_now, assignments)
             continue
 
         for r in order:
             gidx = int(idx[int(r)])
             d = deadline[gidx]
-            t_hat = float(cfg.t_hat[gidx])
 
             placed = False
-            if algorithm == "edl":
-                pid = eng.worst_fit()   # SPT: the ON pair free the earliest
-                if pid >= 0:
+            for c in order_cls[:, gidx]:
+                c = int(c)
+                cfg_c = cfgs[c]
+                t_hat = float(cfg_c.t_hat[gidx])
+                if algorithm == "edl":
+                    pid = eng.worst_fit(class_id=c)  # SPT: ON pair free first
+                    if pid < 0:
+                        continue
                     start = max(t_now, float(eng.mu[pid]))
                     if d - start >= t_hat - _EPS:
                         eng.assign(pid, start, t_hat)
-                        assignments.append(make_assignment(gidx, pid, start, cfg))
+                        assignments.append(make_assignment(
+                            gidx, pid, start, cfg_c, class_id=c))
                         placed = True
+                        break
                     elif theta < 1.0:
-                        t_theta = max(theta * t_hat, float(cfg.t_min[gidx]))
+                        t_theta = max(theta * t_hat, float(cfg_c.t_min[gidx]))
                         window = d - start
                         if window >= t_theta - _EPS:
                             eng.assign(pid, start, window)
-                            pending.append((len(assignments), gidx, window))
+                            pending.append((len(assignments), gidx, window, c))
                             assignments.append(make_assignment(
-                                gidx, pid, start, cfg, duration=window,
-                                readjusted=True))
+                                gidx, pid, start, cfg_c, duration=window,
+                                readjusted=True, class_id=c))
                             placed = True
-            else:  # bin: first-fit in pair-id order
-                pid = eng.first_fit(t_now, d, t_hat)
-                if pid >= 0:
-                    start = max(t_now, float(eng.mu[pid]))
-                    eng.assign(pid, start, t_hat)
-                    assignments.append(make_assignment(gidx, pid, start, cfg))
-                    placed = True
+                            break
+                else:  # bin: first-fit in pair-id order
+                    pid = eng.first_fit(t_now, d, t_hat, class_id=c)
+                    if pid >= 0:
+                        start = max(t_now, float(eng.mu[pid]))
+                        eng.assign(pid, start, t_hat)
+                        assignments.append(make_assignment(
+                            gidx, pid, start, cfg_c, class_id=c))
+                        placed = True
+                        break
             if not placed:
-                pid = eng.acquire_pair(t_now)
+                c = int(primary[gidx])
+                cfg_c = cfgs[c]
+                pid = eng.acquire_pair(t_now, class_id=c)
                 start = max(t_now, float(eng.mu[pid]))
-                eng.assign(pid, start, t_hat)
-                assignments.append(make_assignment(gidx, pid, start, cfg))
+                eng.assign(pid, start, float(cfg_c.t_hat[gidx]))
+                assignments.append(make_assignment(gidx, pid, start, cfg_c,
+                                                   class_id=c))
 
-    # Deferred theta-readjustment solves: one batched dispatch for the run.
-    fill_readjusted(assignments, pending, task_set, interval, use_kernel)
+    # Deferred theta-readjustment solves: one batched dispatch per class.
+    fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs)
 
     e_idle, e_overhead, n_servers = eng.finalize()
     e_run = float(sum(a.energy for a in assignments))
-    violations = count_violations(assignments, deadline, cfg.feasible)
+    violations = count_violations(
+        assignments, deadline, chosen_feasibility(cfgs, assignments, n))
     mk = max((a.finish for a in assignments), default=0.0)
     return cl.ScheduleResult(
         algorithm=f"online-{algorithm}{'+dvfs' if use_dvfs else ''}",
@@ -160,36 +190,58 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
 
 
 def _binpack_offline(eng: ClusterEngine, deadline: np.ndarray, idx, order,
-                     cfg: TaskConfig, t_now: float,
+                     cfgs: List[TaskConfig], order_cls: np.ndarray,
+                     primary: np.ndarray, t_now: float,
                      assignments: List[cl.Assignment]):
     """Algorithm 6, lines 1-7: worst-fit on utilization, cap at 1.0.
 
     The *optimal task utilization* is ``u_hat = t_hat / (d - a)``; the
     worst-fit heuristic sends each task to the pair with the lowest current
-    utilization, opening a new pair when the best candidate would exceed 1.
+    utilization (among pairs of the candidate class), opening a new pair of
+    the task's primary class when no candidate fits.
     """
     util = np.zeros(0)
-    for r in order:
-        gidx = int(idx[int(r)])
-        d = deadline[gidx]
-        t_hat = float(cfg.t_hat[gidx])
-        u_hat = t_hat / max(d - t_now, _EPS)
+
+    def grow():
+        nonlocal util
         if util.shape[0] < eng.n_pairs:
             util = np.concatenate([util,
                                    np.zeros(eng.n_pairs - util.shape[0])])
-        pid = -1
-        on = eng.eligible_mask()
-        if on is not None and on.any():
+
+    for r in order:
+        gidx = int(idx[int(r)])
+        d = deadline[gidx]
+        grow()
+        placed = False
+        for c in order_cls[:, gidx]:
+            c = int(c)
+            cfg_c = cfgs[c]
+            t_hat = float(cfg_c.t_hat[gidx])
+            u_hat = t_hat / max(d - t_now, _EPS)
+            on = eng.eligible_mask(class_id=c)
+            if on is None:
+                on = np.ones(eng.n_pairs, dtype=bool)
+            if not on.any():
+                continue
             pid = int(np.argmin(np.where(on, util[: eng.n_pairs], np.inf)))
             start = max(t_now, float(eng.mu[pid]))
             if util[pid] + u_hat > 1.0 + _EPS or d - start < t_hat - _EPS:
-                pid = -1
-        if pid < 0:
-            pid = eng.acquire_pair(t_now)
-            if util.shape[0] < eng.n_pairs:
-                util = np.concatenate(
-                    [util, np.zeros(eng.n_pairs - util.shape[0])])
-        start = max(t_now, float(eng.mu[pid]))
-        eng.assign(pid, start, t_hat)
-        util[pid] += u_hat
-        assignments.append(make_assignment(gidx, pid, start, cfg))
+                continue
+            eng.assign(pid, start, t_hat)
+            util[pid] += u_hat
+            assignments.append(make_assignment(gidx, pid, start, cfg_c,
+                                               class_id=c))
+            placed = True
+            break
+        if not placed:
+            c = int(primary[gidx])
+            cfg_c = cfgs[c]
+            t_hat = float(cfg_c.t_hat[gidx])
+            u_hat = t_hat / max(d - t_now, _EPS)
+            pid = eng.acquire_pair(t_now, class_id=c)
+            grow()
+            start = max(t_now, float(eng.mu[pid]))
+            eng.assign(pid, start, t_hat)
+            util[pid] += u_hat
+            assignments.append(make_assignment(gidx, pid, start, cfg_c,
+                                               class_id=c))

@@ -6,11 +6,15 @@ All offline algorithms share the same three-phase structure:
 1. **Algorithm 1** - per-task optimal DVFS configuration (deadline-aware),
    one batched solve for the whole task set (the Pallas kernel with
    ``use_kernel=True``); deadline-prior tasks get the boundary solution,
-   energy-prior tasks get the unconstrained optimum.
+   energy-prior tasks get the unconstrained optimum.  With heterogeneous
+   machine classes (``classes=...``) the solve runs once per task **per
+   class** — a single widened kernel dispatch — and each task's classes are
+   ranked min-energy-feasible first (:func:`repro.core.machines.class_order`).
 2. **Task packing** - deadline-prior tasks are pinned to fresh pairs first
    (they must start at t=0), then the energy-prior tasks are placed in EDF
    order by the policy-specific rule, each a vectorized selector on the
-   :class:`~repro.core.engine.ClusterEngine` pair arrays:
+   :class:`~repro.core.engine.ClusterEngine` pair arrays, applied to each
+   candidate class in preference order:
 
    * ``edl``    - shortest-processing-time pair (worst fit) **with
      theta-readjustment**: if the task does not fit at its optimal length, its
@@ -18,30 +22,41 @@ All offline algorithms share the same three-phase structure:
      re-solving the DVFS setting with the remaining window as deadline
      (Algorithm 2, lines 16-19).  The re-solves only pin the finish time to
      the window during packing; the actual DVFS settings/energies are
-     batch-solved afterwards in ONE dispatch (`single_task.readjust_batch`).
+     batch-solved afterwards (`single_task.readjust_batch`, one dispatch per
+     class present).
    * ``edf-wf`` - worst fit (min mu), no readjustment;
    * ``edf-bf`` - best fit (max mu among fitting pairs), no readjustment;
    * ``lpt-ff`` - longest-processing-time order, first fit, no readjustment.
 
+   A task no class can host lands on a fresh pair of its primary
+   (min-energy feasible) class.
+
 3. **Algorithm 3** - the engine finalizer groups pairs into virtual servers
-   of ``l``; idle energy is ``P_idle * sum_j sum_k (F_j - tau_kj)`` (Eq. 6).
+   of ``l`` per class; idle energy is ``P_idle * sum_j sum_k (F_j - tau_kj)``
+   (Eq. 6) with the class's own ``P_idle``.
+
+See docs/EQUATIONS.md for the full equation/algorithm -> code map.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import cluster as cl
-from repro.core import dvfs, single_task
+from repro.core import dvfs, machines, single_task
 from repro.core.dvfs import ScalingInterval
 from repro.core.engine import ClusterEngine
+from repro.core.machines import MachineClass
 from repro.core.single_task import TaskConfig
 from repro.core.tasks import TaskSet
 
 _EPS = 1e-9
+
+#: pending θ-readjustment row: (assignment_index, task_index, window, class_id)
+PendingRow = Tuple[int, int, float, int]
 
 
 def default_config(task_set: TaskSet) -> TaskConfig:
@@ -72,9 +87,29 @@ def configure(task_set: TaskSet, use_dvfs: bool,
                                        use_kernel=use_kernel)
 
 
+def resolve_classes(classes, p_idle: float = cl.P_IDLE,
+                    delta_on: float = cl.DELTA_ON) -> Tuple[MachineClass, ...]:
+    """Class-mix argument -> MachineClass tuple (None = homogeneous default)."""
+    if classes is None:
+        return machines.reference_classes(p_idle=p_idle, delta_on=delta_on)
+    return machines.get_classes(classes)
+
+
+def configure_all(task_set: TaskSet, use_dvfs: bool,
+                  mcs: Sequence[MachineClass],
+                  interval: ScalingInterval = dvfs.WIDE,
+                  use_kernel: bool = False) -> List[TaskConfig]:
+    """Algorithm 1 on every class (offline windows ``d - a``)."""
+    if not use_dvfs:
+        return machines.default_configs(task_set, mcs)
+    allowed = task_set.deadline - task_set.arrival
+    return machines.configure_classes(task_set.params, allowed, mcs,
+                                      interval, use_kernel=use_kernel)
+
+
 def make_assignment(task: int, pair: int, start: float, cfg: TaskConfig,
                     duration: Optional[float] = None,
-                    readjusted: bool = False) -> cl.Assignment:
+                    readjusted: bool = False, class_id: int = 0) -> cl.Assignment:
     """An assignment at the task's configured setting; a readjusted one gets
     its finish pinned to ``start + duration`` and its DVFS fields filled in
     later by :func:`fill_readjusted`."""
@@ -83,29 +118,32 @@ def make_assignment(task: int, pair: int, start: float, cfg: TaskConfig,
                          finish=float(start + t), v=float(cfg.v[task]),
                          fc=float(cfg.fc[task]), fm=float(cfg.fm[task]),
                          power=float(cfg.p_hat[task]),
-                         energy=float(cfg.e_hat[task]), readjusted=readjusted)
+                         energy=float(cfg.e_hat[task]), readjusted=readjusted,
+                         class_id=class_id)
 
 
 def fill_readjusted(assignments: List[cl.Assignment],
-                    pending: List[Tuple[int, int, float]],
+                    pending: List[PendingRow],
                     task_set: TaskSet, interval: ScalingInterval,
-                    use_kernel: bool):
-    """Solve every deferred theta-readjustment in ONE batched dispatch and
-    write the DVFS settings/energies back into the assignment list.
+                    use_kernel: bool, mcs: Sequence[MachineClass]):
+    """Solve every deferred theta-readjustment in one batched dispatch per
+    class present and write the DVFS settings/energies back into the
+    assignment list.
 
-    ``pending`` rows are ``(assignment_index, task_index, window)``.  The
-    schedule itself never depends on these solves — a readjusted task always
-    occupies exactly its window — so they are batched after packing: one
-    ``pallas_call`` (or one jitted boundary solve) instead of one scalar
-    dispatch per readjusted task.
+    ``pending`` rows are ``(assignment_index, task_index, window, class_id)``.
+    The schedule itself never depends on these solves — a readjusted task
+    always occupies exactly its window — so they are batched after packing:
+    one ``pallas_call`` (or one jitted boundary solve) per class instead of
+    one scalar dispatch per readjusted task.
     """
     if not pending:
         return
-    rows = np.asarray([t for _, t, _ in pending], dtype=np.int64)
-    windows = np.asarray([w for _, _, w in pending], dtype=np.float64)
-    v, fc, fm, t, p, e = single_task.readjust_batch(
-        task_set.params[rows], windows, interval, use_kernel=use_kernel)
-    for k, (ai, _, _) in enumerate(pending):
+    rows = np.asarray([t for _, t, _, _ in pending], dtype=np.int64)
+    windows = np.asarray([w for _, _, w, _ in pending], dtype=np.float64)
+    cids = np.asarray([c for _, _, _, c in pending], dtype=np.int64)
+    v, fc, fm, t, p, e = machines.readjust_classes(
+        task_set.params, rows, windows, cids, mcs, interval, use_kernel)
+    for k, (ai, _, _, _) in enumerate(pending):
         a = assignments[ai]
         assignments[ai] = dataclasses.replace(
             a, v=float(v[k]), fc=float(fc[k]), fm=float(fm[k]),
@@ -124,83 +162,135 @@ def count_violations(assignments: List[cl.Assignment], deadline: np.ndarray,
     return int(np.sum(violated))
 
 
+def chosen_feasibility(cfgs: Sequence[TaskConfig],
+                       assignments: List[cl.Assignment],
+                       n_tasks: int) -> np.ndarray:
+    """Per-task feasibility on the class each task actually ran on."""
+    feas = np.ones(n_tasks, dtype=bool)
+    for a in assignments:
+        feas[a.task] = bool(cfgs[a.class_id].feasible[a.task])
+    return feas
+
+
 def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                      algorithm: str = "edl", use_dvfs: bool = True,
                      interval: ScalingInterval = dvfs.WIDE,
                      p_idle: float = cl.P_IDLE,
                      cfg: Optional[TaskConfig] = None,
-                     use_kernel: bool = False) -> cl.ScheduleResult:
-    """Run one offline scheduling algorithm end to end (Algorithms 1+2+3)."""
+                     use_kernel: bool = False,
+                     classes=None) -> cl.ScheduleResult:
+    """Run one offline scheduling algorithm end to end (Algorithms 1+2+3).
+
+    ``classes`` selects the machine-class mix: ``None`` is the homogeneous
+    paper setup (one reference class — identical to the pre-heterogeneity
+    code path), otherwise a sequence of registry names and/or
+    :class:`~repro.core.machines.MachineClass` instances.  ``cfg`` (a
+    precomputed single-class Algorithm-1 output) is only valid for the
+    homogeneous case.
+    """
     algorithm = algorithm.lower()
     if algorithm not in ("edl", "edf-wf", "edf-bf", "lpt-ff"):
         raise ValueError(f"unknown offline algorithm {algorithm!r}")
-    if cfg is None:
-        cfg = configure(task_set, use_dvfs, interval, use_kernel=use_kernel)
+    mcs = resolve_classes(classes, p_idle=p_idle)
+    if cfg is not None:
+        if len(mcs) > 1:
+            raise ValueError("cfg= is only supported for a single class")
+        cfgs = [cfg]
+    else:
+        cfgs = configure_all(task_set, use_dvfs, mcs, interval,
+                             use_kernel=use_kernel)
 
+    n = len(task_set)
     deadline = np.asarray(task_set.deadline, dtype=np.float64)
+    order_cls = machines.class_order(cfgs)          # [C, n]
+    primary = order_cls[0]
     assignments: List[cl.Assignment] = []
-    pending: List[Tuple[int, int, float]] = []
-    eng = ClusterEngine(l, servers=False, p_idle=p_idle)
+    pending: List[PendingRow] = []
+    eng = ClusterEngine(l, servers=False, classes=mcs)
 
-    # --- Phase 2a: deadline-prior tasks, each started at t=0 on a fresh pair.
-    dp_idx = np.nonzero(cfg.deadline_prior)[0]
+    # --- Phase 2a: tasks that are deadline-prior on their primary class,
+    # each started at t=0 on a fresh pair of that class.
+    dp_primary = np.take_along_axis(
+        np.stack([np.asarray(c.deadline_prior, bool) for c in cfgs]),
+        primary[None], axis=0)[0]
+    dp_idx = np.nonzero(dp_primary)[0]
     for t_idx in dp_idx[np.argsort(deadline[dp_idx], kind="stable")]:
         t_idx = int(t_idx)
-        pid = eng.open_pair()
-        eng.assign(pid, 0.0, float(cfg.t_hat[t_idx]))
-        assignments.append(make_assignment(t_idx, pid, 0.0, cfg))
+        c = int(primary[t_idx])
+        pid = eng.open_pair(class_id=c)
+        eng.assign(pid, 0.0, float(cfgs[c].t_hat[t_idx]))
+        assignments.append(make_assignment(t_idx, pid, 0.0, cfgs[c],
+                                           class_id=c))
 
-    # --- Phase 2b: energy-prior tasks by the policy rule.
-    ep_idx = np.nonzero(~cfg.deadline_prior)[0]
+    # --- Phase 2b: energy-prior tasks by the policy rule, trying classes in
+    # min-energy-feasible-first order.
+    ep_idx = np.nonzero(~dp_primary)[0]
     if algorithm == "lpt-ff":
-        order = ep_idx[np.argsort(-cfg.t_hat[ep_idx], kind="stable")]
+        t_hat_primary = np.take_along_axis(
+            np.stack([np.asarray(c.t_hat) for c in cfgs]),
+            primary[None], axis=0)[0]
+        order = ep_idx[np.argsort(-t_hat_primary[ep_idx], kind="stable")]
     else:
         order = ep_idx[np.argsort(deadline[ep_idx], kind="stable")]
 
     for t_idx in order:
         t_idx = int(t_idx)
         d = deadline[t_idx]
-        t_hat = float(cfg.t_hat[t_idx])
+        placed = False
+        for c in order_cls[:, t_idx]:
+            c = int(c)
+            cfg_c = cfgs[c]
+            t_hat = float(cfg_c.t_hat[t_idx])
 
-        if algorithm in ("edl", "edf-wf"):
-            pid = eng.worst_fit()
-            mu = float(eng.mu[pid]) if pid >= 0 else np.inf
-            if pid >= 0 and d - mu >= t_hat - _EPS:
-                eng.assign(pid, mu, t_hat)
-                assignments.append(make_assignment(t_idx, pid, mu, cfg))
-                continue
-            if algorithm == "edl" and pid >= 0:
-                t_theta = max(theta * t_hat, float(cfg.t_min[t_idx]))
-                window = d - mu
-                if window >= t_theta - _EPS:
-                    # theta-readjustment: the task shrinks to exactly the
-                    # remaining window; its DVFS setting is batch-solved
-                    # after packing (fill_readjusted).
-                    eng.assign(pid, mu, window)
-                    pending.append((len(assignments), t_idx, window))
-                    assignments.append(make_assignment(t_idx, pid, mu, cfg,
-                                                   duration=window,
-                                                   readjusted=True))
-                    continue
-        else:
-            pid = eng.best_fit(0.0, d, t_hat) if algorithm == "edf-bf" \
-                else eng.first_fit(0.0, d, t_hat)
-            if pid >= 0:
-                start = float(eng.mu[pid])
-                eng.assign(pid, start, t_hat)
-                assignments.append(make_assignment(t_idx, pid, start, cfg))
-                continue
-        pid = eng.open_pair()
-        eng.assign(pid, 0.0, t_hat)
-        assignments.append(make_assignment(t_idx, pid, 0.0, cfg))
+            if algorithm in ("edl", "edf-wf"):
+                pid = eng.worst_fit(class_id=c)
+                mu = float(eng.mu[pid]) if pid >= 0 else np.inf
+                if pid >= 0 and d - mu >= t_hat - _EPS:
+                    eng.assign(pid, mu, t_hat)
+                    assignments.append(make_assignment(t_idx, pid, mu, cfg_c,
+                                                       class_id=c))
+                    placed = True
+                    break
+                if algorithm == "edl" and pid >= 0:
+                    t_theta = max(theta * t_hat, float(cfg_c.t_min[t_idx]))
+                    window = d - mu
+                    if window >= t_theta - _EPS:
+                        # theta-readjustment: the task shrinks to exactly the
+                        # remaining window; its DVFS setting is batch-solved
+                        # after packing (fill_readjusted).
+                        eng.assign(pid, mu, window)
+                        pending.append((len(assignments), t_idx, window, c))
+                        assignments.append(make_assignment(
+                            t_idx, pid, mu, cfg_c, duration=window,
+                            readjusted=True, class_id=c))
+                        placed = True
+                        break
+            else:
+                pid = eng.best_fit(0.0, d, t_hat, class_id=c) \
+                    if algorithm == "edf-bf" \
+                    else eng.first_fit(0.0, d, t_hat, class_id=c)
+                if pid >= 0:
+                    start = float(eng.mu[pid])
+                    eng.assign(pid, start, t_hat)
+                    assignments.append(make_assignment(t_idx, pid, start,
+                                                       cfg_c, class_id=c))
+                    placed = True
+                    break
+        if not placed:
+            c = int(primary[t_idx])
+            pid = eng.open_pair(class_id=c)
+            eng.assign(pid, 0.0, float(cfgs[c].t_hat[t_idx]))
+            assignments.append(make_assignment(t_idx, pid, 0.0, cfgs[c],
+                                               class_id=c))
 
-    # --- Deferred theta-readjustment solves: one batched dispatch.
-    fill_readjusted(assignments, pending, task_set, interval, use_kernel)
+    # --- Deferred theta-readjustment solves: one batched dispatch per class.
+    fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs)
 
-    # --- Phase 3: Algorithm 3 server grouping + Eq. (6) energies.
+    # --- Phase 3: Algorithm 3 server grouping + Eq. (6) energies per class.
     e_run = float(sum(a.energy for a in assignments))
     e_idle, e_overhead, n_servers = eng.finalize()
-    violations = count_violations(assignments, deadline, cfg.feasible)
+    violations = count_violations(
+        assignments, deadline, chosen_feasibility(cfgs, assignments, n))
     return cl.ScheduleResult(
         algorithm=f"{algorithm}{'+dvfs' if use_dvfs else ''}",
         e_run=e_run, e_idle=e_idle, e_overhead=e_overhead,

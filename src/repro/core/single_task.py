@@ -20,6 +20,10 @@ Two sub-problems, both reduced to a 1-D minimization:
 
 Everything is vectorized over a batch of tasks and jit-compatible; it is both
 the production solver and the oracle for the ``dvfs_opt`` Pallas kernel.
+Heterogeneous machine classes run this same solver once per class —
+:func:`repro.core.machines.configure_classes` stacks the class blocks into
+one widened kernel dispatch.  See docs/EQUATIONS.md for the
+equation/algorithm -> code map.
 """
 
 from __future__ import annotations
@@ -240,10 +244,14 @@ class TaskConfig(NamedTuple):
     n_deadline_prior: int
 
 
-def _pad_pow2(params: DvfsParams, allowed):
+def pad_pow2(params: DvfsParams, allowed, extra_rows: np.ndarray = None):
     """Pad a batch to the next power of two (>= 8) by replicating the last
     task, so the jitted solvers compile O(log n) distinct shapes over a
-    day-long online simulation instead of one per slot population."""
+    day-long online simulation instead of one per slot population.
+
+    ``extra_rows`` (``[n, k]``, e.g. per-row interval bounds) is padded the
+    same way; returns ``(params, allowed, extra_rows, n)``.
+    """
     n = int(np.shape(np.asarray(params.p0))[0])
     n_pad = max(8, 1 << (n - 1).bit_length())
     if n_pad != n:
@@ -254,7 +262,33 @@ def _pad_pow2(params: DvfsParams, allowed):
         allowed = np.concatenate(
             [np.asarray(allowed, np.float64),
              np.full(pad, np.asarray(allowed)[-1])])
-    return params, allowed, n
+        if extra_rows is not None:
+            extra_rows = np.concatenate(
+                [extra_rows,
+                 np.broadcast_to(extra_rows[-1], (pad, extra_rows.shape[1]))],
+                axis=0)
+    return params, allowed, extra_rows, n
+
+
+def config_from_solution(sol: DvfsSolution, params: DvfsParams, allowed,
+                         interval: ScalingInterval) -> TaskConfig:
+    """TaskConfig assembly shared by :func:`configure_tasks` and the
+    heterogeneous class path (``machines.configure_classes``): the t_min
+    floor plus snapping the deadline-boundary f32 residual to ``allowed``
+    so downstream deadline checks are exact."""
+    sol = DvfsSolution(*(np.asarray(f) for f in sol))
+    tmin = np.asarray(dvfs.min_time(params, interval))
+    allowed_arr = np.broadcast_to(np.asarray(allowed, np.float64),
+                                  sol.time.shape)
+    t_hat = np.where(sol.deadline_prior & sol.feasible,
+                     np.minimum(sol.time, allowed_arr), sol.time)
+    return TaskConfig(
+        v=sol.v, fc=sol.fc, fm=sol.fm,
+        t_hat=t_hat, p_hat=sol.power, e_hat=sol.power * t_hat,
+        t_min=np.broadcast_to(tmin, sol.time.shape).copy(),
+        deadline_prior=sol.deadline_prior, feasible=sol.feasible,
+        n_deadline_prior=int(np.sum(sol.deadline_prior)),
+    )
 
 
 def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvfs.WIDE,
@@ -264,7 +298,7 @@ def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvf
     ``allowed`` is ``d - a`` per task.  With ``use_kernel=True`` the batched
     Pallas kernel (interpret mode on CPU) computes the whole solve.
     """
-    params, allowed, n = _pad_pow2(params, allowed)
+    params, allowed, _, n = pad_pow2(params, allowed)
     if use_kernel:
         from repro.kernels import ops as kernel_ops
 
@@ -275,21 +309,7 @@ def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvf
         sol = DvfsSolution(*(np.asarray(f)[:n] for f in sol))
         params = params[:n]
         allowed = np.asarray(allowed)[:n]
-    sol = DvfsSolution(*(np.asarray(f) for f in sol))
-    tmin = np.asarray(dvfs.min_time(params, interval))
-    # The deadline-constrained optimum sits exactly on the t == allowed
-    # boundary; snap the solver's f32 residual there so downstream deadline
-    # checks are exact.
-    allowed_arr = np.broadcast_to(np.asarray(allowed, np.float64), sol.time.shape)
-    t_hat = np.where(sol.deadline_prior & sol.feasible,
-                     np.minimum(sol.time, allowed_arr), sol.time)
-    return TaskConfig(
-        v=sol.v, fc=sol.fc, fm=sol.fm,
-        t_hat=t_hat, p_hat=sol.power, e_hat=sol.power * t_hat,
-        t_min=np.broadcast_to(tmin, sol.time.shape).copy(),
-        deadline_prior=sol.deadline_prior, feasible=sol.feasible,
-        n_deadline_prior=int(np.sum(sol.deadline_prior)),
-    )
+    return config_from_solution(sol, params, allowed, interval)
 
 
 def readjust_batch(params: DvfsParams, windows, interval: ScalingInterval = dvfs.WIDE,
@@ -305,7 +325,7 @@ def readjust_batch(params: DvfsParams, windows, interval: ScalingInterval = dvfs
     (so scheduler mu updates land exactly on the deadline).
     """
     windows = np.asarray(windows, dtype=np.float64)
-    params, padded, n = _pad_pow2(params, windows)
+    params, padded, _, n = pad_pow2(params, windows)
     if use_kernel:
         from repro.kernels import ops as kernel_ops
 

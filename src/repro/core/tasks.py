@@ -17,6 +17,11 @@ time components by an integer in [10, 50], draw the task utilization
 target *task-set utilization* ``U_J`` (normalized to 1024 CPU-GPU pairs);
 online sets additionally spread arrivals over the 1440 one-minute slots of a
 day with a Poisson profile.
+
+The library is the *reference-class* (``gtx-1080ti``) fit: heterogeneous
+machine classes in :mod:`repro.core.machines` derive their own constants
+from it via :meth:`~repro.core.machines.MachineClass.adapt`.  See
+docs/EQUATIONS.md for the equation/algorithm -> code map.
 """
 
 from __future__ import annotations

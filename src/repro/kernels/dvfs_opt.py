@@ -2,13 +2,22 @@
 
 This is the scheduler's own hot-spot Φ: at every online time slot the
 cluster solves ``argmin E(V, fc, fm)`` for every newly-arrived task
-(Algorithm 1/5) — thousands of independent 2-variable minimizations.  The
-kernel evaluates the energy surface for a block of tasks over a dense
+(Algorithm 1/5) — thousands of independent 2-variable minimizations, and
+with heterogeneous machine classes one such solve per task **per class**.
+The kernel evaluates the energy surface for a block of tasks over a dense
 frequency grid entirely in VMEM and reduces the argmin, fusing what would
 otherwise be a dozen HBM round-trips per task into one.
 
-Layout: tasks are a [n, 8] f32 matrix (p0, γ, c, D, δ, t0, allowed, pad);
+Layout: tasks are a [n, 16] f32 matrix
+    (p0, γ, c, D, δ, t0, allowed, readjust,
+     v_min, v_max, fc_min, fm_min, fm_max, pad, pad, pad);
 block = (BT=128 tasks, G=128 grid points) — an (8,128)-aligned VPU tile.
+Columns 8-12 carry the row's own :class:`ScalingInterval` bounds, which is
+what lets one ``pallas_call`` solve a class-stacked ``[C*n, 16]`` matrix
+where every class block has a different DVFS box (see
+``repro.core.machines.configure_classes``).  The legacy ``[n, 8]`` layout
+(homogeneous interval) is widened on entry from the static ``interval``
+argument.
 
 Two grid sweeps per task block, matching the paper's case split:
 
@@ -34,6 +43,7 @@ from repro.core.dvfs import G1_A, G1_B, G1_C, ScalingInterval, WIDE
 
 BT = 128   # tasks per block
 G = 128    # grid points per sweep
+NCOL = 16  # task-matrix columns (6 params, allowed, readjust, 5 bounds, pad)
 INF = 1e30
 
 
@@ -45,12 +55,15 @@ def _g1_inv(fc):
     return G1_B * jnp.square(jnp.maximum(fc - G1_C, 0.0)) + G1_A
 
 
-def _kernel(tasks_ref, out_ref, *, iv: ScalingInterval):
-    t = tasks_ref[...].astype(jnp.float32)               # [BT, 8]
+def _kernel(tasks_ref, out_ref):
+    t = tasks_ref[...].astype(jnp.float32)               # [BT, 16]
     p0, gamma, cc = t[:, 0:1], t[:, 1:2], t[:, 2:3]
     dd, delta, t0 = t[:, 3:4], t[:, 4:5], t[:, 5:6]
     allowed = t[:, 6:7]
     readjust = t[:, 7] > 0.5   # theta-readjustment rows: boundary binds
+    # Per-row scaling-interval bounds (columns 8-12), shape [BT, 1].
+    v_min, v_max = t[:, 8:9], t[:, 9:10]
+    fc_min, fm_min, fm_max = t[:, 10:11], t[:, 11:12], t[:, 12:13]
 
     frac = jax.lax.broadcasted_iota(jnp.float32, (BT, G), 1) / (G - 1)
 
@@ -60,51 +73,48 @@ def _kernel(tasks_ref, out_ref, *, iv: ScalingInterval):
         return pw * tt, pw, tt
 
     # ---- sweep 1: unconstrained, fc grid on [fc_min, g1(v_max)].
-    fc_max = _g1(jnp.float32(iv.v_max))
-    fc = iv.fc_min + (fc_max - iv.fc_min) * frac         # [BT, G]
-    v = jnp.maximum(iv.v_min, _g1_inv(fc))
+    fc_max = _g1(v_max)                                  # [BT, 1]
+    fc = fc_min + (fc_max - fc_min) * frac               # [BT, G]
+    v = jnp.maximum(v_min, _g1_inv(fc))
     # closed-form fm (paper §4.1), clamped; gamma == 0 -> fm_max.
     num = (p0 + cc * jnp.square(v) * fc) * dd * (1.0 - delta)
     den = gamma * (t0 + dd * delta / fc)
     fm = jnp.sqrt(num / jnp.maximum(den, 1e-30))
-    fm = jnp.where(gamma <= 0.0, iv.fm_max, fm)
-    fm = jnp.clip(fm, iv.fm_min, iv.fm_max)
+    fm = jnp.where(gamma <= 0.0, fm_max, fm)
+    fm = jnp.clip(fm, fm_min, fm_max)
     e_u, _, t_u = energy_at(v, fc, fm)
     iu = jnp.argmin(e_u, axis=1)                          # [BT]
     rows = jnp.arange(BT)
     fc_u = fc[rows, iu]
     v_u = v[rows, iu]
     fm_u = fm[rows, iu]
-    e_un = e_u[rows, iu]
     t_un = t_u[rows, iu]
 
     # ---- sweep 2: deadline boundary t(fc, fm) = allowed, fm grid.
-    fm2 = iv.fm_min + (iv.fm_max - iv.fm_min) * frac
+    fm2 = fm_min + (fm_max - fm_min) * frac
     slack = allowed - t0 - dd * (1.0 - delta) / fm2
     fc_req = dd * delta / jnp.maximum(slack, 1e-30)
-    fc_req = jnp.where(delta <= 0.0, iv.fc_min, fc_req)
+    fc_req = jnp.where(delta <= 0.0, fc_min, fc_req)
     bad = (slack <= 0.0) & (delta > 0.0)
-    fc2 = jnp.clip(fc_req, iv.fc_min, fc_max)
-    v2 = jnp.maximum(iv.v_min, _g1_inv(fc2))
+    fc2 = jnp.clip(fc_req, fc_min, fc_max)
+    v2 = jnp.maximum(v_min, _g1_inv(fc2))
     e_d, _, t_d = energy_at(v2, fc2, fm2)
     e_d = jnp.where(bad | (fc_req > fc_max + 1e-6), INF, e_d)
     idx = jnp.argmin(e_d, axis=1)
     fc_d = fc2[rows, idx]
     v_d = v2[rows, idx]
     fm_d = fm2[rows, idx]
-    e_dl = e_d[rows, idx]
-    t_dl = jnp.minimum(t_d[rows, idx], allowed[:, 0])
 
     # ---- decision rule (== solve_with_deadline / solve_on_boundary):
     # energy-prior if the unconstrained optimum meets the deadline;
     # readjust rows shrank their window below the optimum, so the boundary
     # binds by construction; infeasible (deadline < t_min) -> max speed.
     energy_prior = (t_un <= allowed[:, 0] + 1e-6) & ~readjust
-    t_min = (dd * (delta / fc_max + (1.0 - delta) / iv.fm_max) + t0)[:, 0]
+    t_min = (dd * (delta / fc_max + (1.0 - delta) / fm_max) + t0)[:, 0]
     feasible = allowed[:, 0] >= t_min - 1e-6
-    v_mx = jnp.full((BT,), iv.v_max, jnp.float32)
-    fc_mx = jnp.full((BT,), fc_max, jnp.float32)
-    fm_mx = jnp.full((BT,), iv.fm_max, jnp.float32)
+    v_mx = v_max[:, 0]
+    fc_mx = fc_max[:, 0]
+    fm_mx = fm_max[:, 0]
 
     def pick(unc, con, mx):
         x = jnp.where(energy_prior, unc, con)
@@ -126,18 +136,30 @@ def _kernel(tasks_ref, out_ref, *, iv: ScalingInterval):
 @functools.partial(jax.jit, static_argnames=("interval", "interpret"))
 def dvfs_solve_kernel(tasks: jax.Array, *, interval: ScalingInterval = WIDE,
                       interpret: bool = False) -> jax.Array:
-    """tasks: [n, 8] f32 (p0, gamma, c, D, delta, t0, allowed, pad) ->
-    [n, 8] (v, fc, fm, t, p, e, deadline_prior, feasible)."""
+    """tasks: [n, 8] or [n, 16] f32 (see module docstring) ->
+    [n, 8] (v, fc, fm, t, p, e, deadline_prior, feasible).
+
+    An 8-column matrix is widened with the static ``interval``'s bounds
+    (the homogeneous legacy layout); a 16-column matrix carries per-row
+    bounds and ignores ``interval``.
+    """
     n = tasks.shape[0]
+    if tasks.shape[1] == 8:
+        bounds = jnp.broadcast_to(
+            jnp.asarray(interval.bounds(), tasks.dtype), (n, 5))
+        pad = jnp.zeros((n, NCOL - 8 - 5), tasks.dtype)
+        tasks = jnp.concatenate([tasks, bounds, pad], axis=1)
+    elif tasks.shape[1] != NCOL:
+        raise ValueError(f"task matrix must have 8 or {NCOL} columns, "
+                         f"got {tasks.shape[1]}")
     n_pad = -(-n // BT) * BT
     if n_pad != n:
-        pad = jnp.ones((n_pad - n, 8), tasks.dtype)  # benign dummy tasks
+        pad = jnp.ones((n_pad - n, NCOL), tasks.dtype)  # benign dummy tasks
         tasks = jnp.concatenate([tasks, pad], axis=0)
-    kernel = functools.partial(_kernel, iv=interval)
     out = pl.pallas_call(
-        kernel,
+        _kernel,
         grid=(n_pad // BT,),
-        in_specs=[pl.BlockSpec((BT, 8), lambda i: (i, 0))],
+        in_specs=[pl.BlockSpec((BT, NCOL), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((BT, 8), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pad, 8), jnp.float32),
         interpret=interpret,

@@ -57,7 +57,8 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
 
 def dvfs_solve(params: DvfsParams, allowed: np.ndarray,
                interval: ScalingInterval = WIDE,
-               readjust: bool = False) -> DvfsSolution:
+               readjust: bool = False,
+               interval_rows: Optional[np.ndarray] = None) -> DvfsSolution:
     """Batched single-task DVFS optimum via the Pallas kernel.
 
     Drop-in for ``single_task.solve_with_deadline`` (same DvfsSolution
@@ -65,11 +66,26 @@ def dvfs_solve(params: DvfsParams, allowed: np.ndarray,
     ``readjust=True`` every row is flagged as a theta-readjustment (column
     7 of the task matrix): the kernel then takes the deadline-boundary
     sweep unconditionally — the drop-in for ``single_task.solve_on_boundary``
-    used by ``readjust_batch(use_kernel=True)``."""
+    used by ``readjust_batch(use_kernel=True)``.
+
+    ``interval_rows`` (``[n, 5]``: v_min, v_max, fc_min, fm_min, fm_max)
+    gives every row its own scaling box — the heterogeneous-class path
+    (``machines.configure_classes``) stacks one class block per interval
+    and solves them all in this one dispatch.  When omitted, the static
+    ``interval`` applies to every row."""
     cols = [np.asarray(f, np.float32) for f in params.astuple()]
     n = cols[0].shape[0]
     flag = np.ones(n, np.float32) if readjust else np.zeros(n, np.float32)
-    tasks = np.stack(cols + [np.asarray(allowed, np.float32), flag], axis=1)
+    cols = cols + [np.asarray(allowed, np.float32), flag]
+    if interval_rows is not None:
+        bounds = np.asarray(interval_rows, np.float32)
+        if bounds.shape != (n, 5):
+            raise ValueError(f"interval_rows must be [n, 5], got {bounds.shape}")
+        tasks = np.concatenate(
+            [np.stack(cols, axis=1), bounds, np.zeros((n, 3), np.float32)],
+            axis=1)
+    else:
+        tasks = np.stack(cols, axis=1)
     out = np.asarray(dvfs_solve_kernel(jnp.asarray(tasks), interval=interval,
                                        interpret=_interpret()))
     return DvfsSolution(v=out[:, 0], fc=out[:, 1], fm=out[:, 2],

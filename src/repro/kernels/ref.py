@@ -50,7 +50,20 @@ def dvfs_solve_ref(tasks: np.ndarray,
 
     Column 7 > 0.5 flags a theta-readjustment row: those take the forced
     deadline-boundary solve (``solve_on_boundary``), matching the kernel's
-    readjust sweep."""
+    readjust sweep.
+
+    A widened ``[n, 16]`` matrix (columns 8-12 = per-row interval bounds,
+    the heterogeneous-class layout) is solved by grouping rows that share
+    a scaling box and running the production solver once per group —
+    exactly the semantics of the kernel's per-row bounds."""
+    if tasks.shape[1] >= 13:
+        bounds = np.asarray(tasks[:, 8:13], np.float32)
+        out = np.zeros((tasks.shape[0], 8), np.float32)
+        for row in np.unique(bounds, axis=0):
+            m = np.all(bounds == row, axis=1)
+            iv = ScalingInterval(*(float(x) for x in row))
+            out[m] = dvfs_solve_ref(tasks[m, :8], iv)
+        return out
     params = DvfsParams(p0=tasks[:, 0], gamma=tasks[:, 1], c=tasks[:, 2],
                         big_d=tasks[:, 3], delta=tasks[:, 4], t0=tasks[:, 5])
     sol = single_task.solve_with_deadline(params, tasks[:, 6], interval)

@@ -1,0 +1,95 @@
+"""Docs CI gate: intra-repo markdown links resolve and README quickstart
+commands run ``--help`` cleanly.
+
+    PYTHONPATH=src python tools/check_docs.py [--no-commands]
+
+Checks every tracked ``*.md`` file for relative links whose target file is
+missing, then extracts ``PYTHONPATH=src python ...`` command lines from
+README.md bash blocks and runs each with ``--help`` appended (argparse
+surfaces import errors and CLI drift without paying for a real run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files():
+    out = subprocess.run(["git", "ls-files", "*.md"], cwd=REPO,
+                         capture_output=True, text=True, check=True)
+    return [p for p in out.stdout.splitlines() if p]
+
+
+def check_links() -> list:
+    errors = []
+    for md in md_files():
+        base = os.path.dirname(os.path.join(REPO, md))
+        text = open(os.path.join(REPO, md)).read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = os.path.normpath(os.path.join(base, path))
+            if not os.path.exists(resolved):
+                errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def readme_commands() -> list:
+    """``PYTHONPATH=src python ...`` lines from README bash blocks, with
+    backslash continuations joined."""
+    text = open(os.path.join(REPO, "README.md")).read()
+    cmds = []
+    for block in re.findall(r"```bash\n(.*?)```", text, re.S):
+        joined = block.replace("\\\n", " ")
+        for line in joined.splitlines():
+            line = line.split("#", 1)[0].strip()
+            if line.startswith("PYTHONPATH=src python") and "pytest" not in line:
+                cmds.append(line)
+    return cmds
+
+
+def check_commands() -> list:
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for cmd in readme_commands():
+        argv = cmd.split()[1:] + ["--help"]  # drop the PYTHONPATH=src prefix
+        r = subprocess.run(argv, cwd=REPO, env=env, capture_output=True,
+                           text=True, timeout=300)
+        status = "ok" if r.returncode == 0 else f"exit {r.returncode}"
+        print(f"[check-docs] {' '.join(argv)}: {status}")
+        if r.returncode != 0:
+            errors.append(f"{cmd!r} --help failed:\n{r.stderr[-2000:]}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-commands", action="store_true",
+                    help="only check markdown links")
+    args = ap.parse_args(argv)
+    errors = check_links()
+    print(f"[check-docs] {len(md_files())} markdown files, "
+          f"{len(errors)} broken links")
+    if not args.no_commands:
+        errors += check_commands()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
