@@ -42,6 +42,11 @@ def main(argv=None):
     from benchmarks import scheduler_throughput
     scheduler_throughput.run(verbose=False)
 
+    print("# --- Online scale (event-driven engine) ---", flush=True)
+    from benchmarks import online_scale
+    online_scale.run_one(100000 if args.full else 20000, "uniform",
+                         verbose=False)
+
     if not args.skip_roofline:
         print("# --- Roofline (deliverable g; from dry-run JSONs) ---",
               flush=True)

@@ -38,9 +38,12 @@ RHO = 2              # slots; floor(DELTA_ON / P_IDLE), S5.1.2
 MAX_PAIRS = 2048     # cluster-wide pair budget, S5.1.2
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Assignment:
-    """One scheduled task: where, when, and at which DVFS setting."""
+    """One scheduled task: where, when, and at which DVFS setting.
+
+    ``slots=True``: online horizons carry one record per task (100k+), so
+    construction cost and footprint matter."""
 
     task: int
     pair: int

@@ -26,11 +26,14 @@ Two operating modes share the arrays and the Eq. (7) finalizer:
   pairs by finish time, group ``l`` consecutive pairs into a *virtual*
   server whose powered-on span is its longest pair — and then evaluates the
   same Eq. (7) sum with ``omega = 0``, which is exactly Eq. (6).
-* ``servers=True`` (online): pairs come in server granules of ``l``; the
-  DRS sweep powers a server off once all of its pairs have been idle for
-  ``rho`` slots, and every power-on adds ``l`` to the turn-on count
-  ``omega``.  :meth:`finalize` powers off the stragglers and returns (per
-  class ``k``)
+* ``servers=True`` (online): pairs come in server granules of ``l``; DRS
+  power-off is an *event*: a server goes off exactly ``rho`` slots after
+  its last pair frees up, and :meth:`settle` books every such event at
+  its exact time ``mu_srv + rho`` no matter how far past it the
+  simulation has advanced (arrival slots may be arbitrarily sparse).
+  Every power-on adds ``l`` to the turn-on count ``omega``.
+  :meth:`finalize` settles the stragglers through the same primitive and
+  returns (per class ``k``)
 
       E_idle     = sum_k P_idle[k] * (sum_j on_time_jk * l - sum busy_k)
       E_overhead = sum_k Delta[k] * omega_k.
@@ -83,6 +86,10 @@ class ClusterEngine:
         self._on_time = np.zeros(cap_s)
         self._turn_ons = np.zeros(cap_s, dtype=np.int64)
         self._srv_cls = np.zeros(cap_s, dtype=np.int64)
+        # Server-level finish time max_k mu_{server pairs} maintained
+        # incrementally (mu only ever moves forward), so settle() never
+        # re-reduces the pair columns.
+        self._mu_srv = np.zeros(cap_s)
 
     # Back-compat scalar views (meaningful for the single-class engine).
     @property
@@ -140,6 +147,7 @@ class ClusterEngine:
                                          np.zeros(pad, dtype=np.int64)])
         self._srv_cls = np.concatenate([self._srv_cls,
                                         np.zeros(pad, dtype=np.int64)])
+        self._mu_srv = np.concatenate([self._mu_srv, np.zeros(pad)])
 
     # -- transitions ---------------------------------------------------------
     def open_pair(self, mu0: float = 0.0, class_id: int = 0) -> int:
@@ -163,6 +171,7 @@ class ClusterEngine:
         self._on_since[sid] = t
         self._turn_ons[sid] = self.l
         self._srv_cls[sid] = class_id
+        self._mu_srv[sid] = t
         lo = self.n_pairs
         self._mu[lo: lo + self.l] = t   # a fresh pair is free *now*
         self._busy[lo: lo + self.l] = 0.0
@@ -176,6 +185,7 @@ class ClusterEngine:
         self._on_since[sid] = t
         self._turn_ons[sid] += self.l
         self._mu[sid * self.l: (sid + 1) * self.l] = t
+        self._mu_srv[sid] = t
 
     def acquire_pair(self, t: float, class_id: int = 0) -> int:
         """A fresh pair of ``class_id``: prefer re-powering an off server of
@@ -190,22 +200,62 @@ class ClusterEngine:
         return sid * self.l
 
     def assign(self, pid: int, start: float, duration: float):
-        self._mu[pid] = start + duration
+        end = start + duration
+        self._mu[pid] = end
         self._busy[pid] += duration
+        if self.server_mode:
+            sid = pid // self.l
+            if end > self._mu_srv[sid]:
+                self._mu_srv[sid] = end
 
-    def drs_sweep(self, t: float):
-        """Power off every server whose pairs have all been idle >= rho."""
+    def book_assignments(self, pids: np.ndarray, starts: np.ndarray,
+                         durations: np.ndarray):
+        """Busy-time and server-finish bookkeeping for a whole batch of
+        assignments (duplicate pids allowed, in chronological order) whose
+        pair ``mu`` column is written separately via :meth:`sync_mu` — the
+        group-commit half of the vectorized placement path."""
+        np.add.at(self._busy, pids, durations)
+        if self.server_mode:
+            np.maximum.at(self._mu_srv, pids // self.l, starts + durations)
+
+    def sync_mu(self, pids: np.ndarray, mus: np.ndarray):
+        """Write a block of pair finish times (the other group-commit half;
+        values must be the result of chronologically applied assignments)."""
+        self._mu[pids] = mus
+
+    def settle(self, t: float = np.inf):
+        """Advance the engine to time ``t``, booking every DRS power-off
+        *event* that occurred on the way — exactly.
+
+        A server's power-off event fires ``rho`` slots after its last pair
+        frees up, i.e. at ``mu_srv + rho``.  Every ON server whose event
+        time is ``<= t`` is powered off with an on-span of exactly
+        ``mu_srv + rho - on_since`` — independent of how far past the event
+        the simulation has advanced, so sparse arrival slots never inflate
+        ``E_idle``.  ``settle()`` with no argument books all outstanding
+        events (the online :meth:`finalize`).
+        """
         ns = self.n_servers
         if not ns:
             return
-        mu_srv = self._mu[: ns * self.l].reshape(ns, self.l).max(axis=1)
+        mu_srv = self._mu_srv[: ns]
         on = self._on[: ns]
-        off = on & (t - mu_srv >= self.rho - _EPS)
+        off = on & (mu_srv + self.rho <= t + _EPS)
         if off.any():
-            self._on_time[: ns][off] += t - self._on_since[: ns][off]
+            self._on_time[: ns][off] += (mu_srv[off] + self.rho
+                                         - self._on_since[: ns][off])
             self._on[: ns][off] = False
 
+    # Back-compat name: the sweep is now the exact event-settling primitive
+    # (the old sweep booked ``t - on_since`` at whatever slot it happened to
+    # run, overcharging E_idle by the full arrival gap past ``mu + rho``).
+    drs_sweep = settle
+
     # -- pair selection (the policy rules' vectorized primitives) ------------
+    def on_pair_mask(self) -> np.ndarray:
+        """Mask of pairs whose server is powered on, shape ``[n_pairs]``."""
+        return np.repeat(self._on[: self.n_servers], self.l)
+
     def eligible_mask(self, class_id: Optional[int] = None):
         """Mask of assignable pairs (``None`` == all): every pair offline,
         only pairs of powered-on servers online; restricted to one machine
@@ -275,21 +325,18 @@ class ClusterEngine:
     def finalize(self):
         """Close the books: returns ``(e_idle, e_overhead, n_servers)``.
 
-        Online mode powers off the remaining servers ``rho`` slots after
-        their last pair frees up; offline mode first runs Algorithm 3 per
-        class to group the standalone pairs into (class-homogeneous) virtual
-        servers, powered on for exactly their longest pair's span.  Both
-        then evaluate the same Eq. (7) idle/overhead sums over the server
-        arrays with per-class ``p_idle``/``delta_on``.
+        Online mode settles every outstanding power-off event — the same
+        :meth:`settle` primitive the simulation loop advances with, so a
+        server powered off mid-run and one powered off here book the
+        identical ``mu_srv + rho - on_since`` span; offline mode first runs
+        Algorithm 3 per class to group the standalone pairs into
+        (class-homogeneous) virtual servers, powered on for exactly their
+        longest pair's span.  Both then evaluate the same Eq. (7)
+        idle/overhead sums over the server arrays with per-class
+        ``p_idle``/``delta_on``.
         """
         if self.server_mode:
-            ns = self.n_servers
-            if ns:
-                mu_srv = self._mu[: ns * self.l].reshape(ns, self.l).max(axis=1)
-                on = self._on[: ns]
-                self._on_time[: ns][on] += (mu_srv[on] + self.rho
-                                            - self._on_since[: ns][on])
-                self._on[: ns] = False
+            self.settle()
         elif self.n_pairs:
             # Algorithm 3 per class: each virtual server is powered on for
             # exactly its longest pair's span (servers never mix classes).

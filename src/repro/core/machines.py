@@ -216,24 +216,18 @@ def configure_classes(params: DvfsParams, allowed: np.ndarray,
     return cfgs
 
 
-def default_configs(task_set, classes: Sequence[MachineClass]) -> List[TaskConfig]:
+def default_configs(task_set, classes: Sequence[MachineClass],
+                    allowed=None) -> List[TaskConfig]:
     """The no-DVFS configuration per class: every task at (1, 1, 1) with the
-    class-adapted constants (generalizes ``scheduling.default_config``)."""
-    allowed = np.asarray(task_set.deadline - task_set.arrival, np.float64)
-    out: List[TaskConfig] = []
-    for mc in classes:
-        a = mc.adapt(task_set.params)
-        t_star = np.asarray(a.default_time())
-        p_star = np.asarray(a.default_power())
-        ones = np.ones(t_star.shape[0])
-        out.append(TaskConfig(
-            v=ones.copy(), fc=ones.copy(), fm=ones.copy(),
-            t_hat=t_star.copy(), p_hat=p_star.copy(), e_hat=p_star * t_star,
-            t_min=t_star.copy(),
-            deadline_prior=(t_star > allowed + _EPS),
-            feasible=(t_star <= allowed + _EPS),
-            n_deadline_prior=int(np.sum(t_star > allowed + _EPS))))
-    return out
+    class-adapted constants — one :func:`repro.core.single_task.no_dvfs_config`
+    per class (the same implementation ``scheduling.default_config`` wraps,
+    so the homogeneous and heterogeneous fallbacks cannot drift).
+    ``allowed`` overrides the per-task window (the online scheduler passes
+    the slot-aligned ``d - ceil(a)``); default is the offline ``d - a``."""
+    if allowed is None:
+        allowed = np.asarray(task_set.deadline - task_set.arrival, np.float64)
+    return [single_task.no_dvfs_config(mc.adapt(task_set.params), allowed)
+            for mc in classes]
 
 
 def class_order(cfgs: Sequence[TaskConfig]) -> np.ndarray:

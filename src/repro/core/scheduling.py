@@ -60,20 +60,10 @@ PendingRow = Tuple[int, int, float, int]
 
 
 def default_config(task_set: TaskSet) -> TaskConfig:
-    """A no-DVFS configuration: every task runs at (1, 1, 1)."""
-    n = len(task_set)
-    t_star = task_set.t_star
-    p_star = task_set.p_star
-    allowed = task_set.deadline - task_set.arrival
-    ones = np.ones(n)
-    return TaskConfig(
-        v=ones.copy(), fc=ones.copy(), fm=ones.copy(),
-        t_hat=t_star.copy(), p_hat=p_star.copy(), e_hat=(p_star * t_star),
-        t_min=t_star.copy(),  # no scaling => no shrink room
-        deadline_prior=(t_star > allowed + _EPS),
-        feasible=(t_star <= allowed + _EPS),
-        n_deadline_prior=int(np.sum(t_star > allowed + _EPS)),
-    )
+    """A no-DVFS configuration: every task runs at (1, 1, 1) (the shared
+    :func:`repro.core.single_task.no_dvfs_config` on the reference fit)."""
+    return single_task.no_dvfs_config(task_set.params,
+                                      task_set.deadline - task_set.arrival)
 
 
 def configure(task_set: TaskSet, use_dvfs: bool,
@@ -156,9 +146,11 @@ def count_violations(assignments: List[cl.Assignment], deadline: np.ndarray,
     time (cannot meet its deadline at max speed) OR finished past its
     deadline — never both."""
     violated = ~np.asarray(feasible, dtype=bool)
-    for a in assignments:
-        if a.finish > deadline[a.task] + 1e-6:
-            violated[a.task] = True
+    if assignments:
+        n = len(assignments)
+        t = np.fromiter((a.task for a in assignments), np.int64, n)
+        f = np.fromiter((a.finish for a in assignments), np.float64, n)
+        violated[t[f > deadline[t] + 1e-6]] = True
     return int(np.sum(violated))
 
 
@@ -167,8 +159,17 @@ def chosen_feasibility(cfgs: Sequence[TaskConfig],
                        n_tasks: int) -> np.ndarray:
     """Per-task feasibility on the class each task actually ran on."""
     feas = np.ones(n_tasks, dtype=bool)
-    for a in assignments:
-        feas[a.task] = bool(cfgs[a.class_id].feasible[a.task])
+    if not assignments:
+        return feas
+    n = len(assignments)
+    t = np.fromiter((a.task for a in assignments), np.int64, n)
+    if len(cfgs) == 1:
+        feas[t] = np.asarray(cfgs[0].feasible, bool)[t]
+        return feas
+    cid = np.fromiter((a.class_id for a in assignments), np.int64, n)
+    for c in np.unique(cid):
+        tc = t[cid == c]
+        feas[tc] = np.asarray(cfgs[int(c)].feasible, bool)[tc]
     return feas
 
 

@@ -291,6 +291,29 @@ def config_from_solution(sol: DvfsSolution, params: DvfsParams, allowed,
     )
 
 
+def no_dvfs_config(params: DvfsParams, allowed) -> TaskConfig:
+    """The no-DVFS configuration: every task runs at ``(1, 1, 1)``.
+
+    The ONE implementation behind both ``scheduling.default_config``
+    (homogeneous) and ``machines.default_configs`` (per adapted class), so
+    the ``(1, 1, 1)`` fallback cannot drift between the two paths.  With no
+    scaling there is no shrink room: ``t_min == t_hat == t*``.
+    """
+    allowed = np.asarray(allowed, dtype=np.float64)
+    t_star = np.asarray(params.default_time())
+    p_star = np.asarray(params.default_power())
+    ones = np.ones(t_star.shape[0])
+    deadline_prior = t_star > allowed + 1e-9
+    return TaskConfig(
+        v=ones.copy(), fc=ones.copy(), fm=ones.copy(),
+        t_hat=t_star.copy(), p_hat=p_star.copy(), e_hat=(p_star * t_star),
+        t_min=t_star.copy(),
+        deadline_prior=deadline_prior,
+        feasible=~deadline_prior,
+        n_deadline_prior=int(np.sum(deadline_prior)),
+    )
+
+
 def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvfs.WIDE,
                     use_kernel: bool = False) -> TaskConfig:
     """Algorithm 1: per-task optimal DVFS settings for a whole task set.

@@ -142,6 +142,63 @@ def generate_offline(target_util: float, seed: int = 0,
     return TaskSet(arrival, deadline, params, u)
 
 
+def _draw_n(rng: np.random.Generator, library: DvfsParams, n: int):
+    """Draw exactly ``n`` tasks (app, scale, utilization) the §5.1.3 way —
+    vectorized, since a 1M-task trace is a realistic request."""
+    p0, gamma, c, big_d, delta, t0 = (np.asarray(f, np.float64)
+                                      for f in library.astuple())
+    app = rng.integers(p0.shape[0], size=n)
+    k = rng.integers(SCALE_LO, SCALE_HI + 1, size=n).astype(np.float64)
+    u = np.clip(rng.uniform(0.0, 1.0, n), 1e-3, 1.0)
+    params = DvfsParams(p0=p0[app], gamma=gamma[app], c=c[app],
+                        big_d=big_d[app] * k, delta=delta[app],
+                        t0=t0[app] * k)
+    return params, u
+
+
+TRACE_PATTERNS = ("uniform", "sparse", "bursty", "diurnal")
+
+
+def generate_trace(n_tasks: int, pattern: str = "uniform",
+                   horizon: int = DAY_SLOTS, seed: int = 0,
+                   library: DvfsParams | None = None) -> TaskSet:
+    """A task-count-driven online trace with a named arrival pattern.
+
+    Complements :func:`generate_online` (which targets a *utilization*) for
+    scale benchmarks that need exactly ``n_tasks`` tasks:
+
+    * ``uniform`` — every slot equally likely;
+    * ``sparse``  — arrivals only on every 32nd slot (arrival gaps far
+      beyond ``rho``, the regime that exposes DRS power-off accounting);
+    * ``bursty``  — a handful of random slots carry everything;
+    * ``diurnal`` — a day-shaped sinusoidal rate (§5.1.3's day profile).
+    """
+    if pattern not in TRACE_PATTERNS:
+        raise ValueError(f"unknown arrival pattern {pattern!r}; "
+                         f"choose from {TRACE_PATTERNS}")
+    rng = np.random.default_rng(seed)
+    library = library if library is not None else app_library()
+    params, u = _draw_n(rng, library, int(n_tasks))
+
+    slots = np.arange(1, horizon + 1, dtype=np.int64)
+    if pattern == "uniform":
+        p = np.ones(horizon)
+    elif pattern == "sparse":
+        p = (slots % 32 == 1).astype(np.float64)
+    elif pattern == "bursty":
+        n_bursts = max(1, min(horizon, n_tasks // 512 + 1))
+        p = np.zeros(horizon)
+        p[rng.choice(horizon, size=n_bursts, replace=False)] = 1.0
+    else:  # diurnal
+        p = 1.0 + np.sin(2.0 * np.pi * slots / horizon - 0.5 * np.pi)
+        p += 1e-3
+    counts = rng.multinomial(n_tasks, p / p.sum())
+    arrival = np.repeat(slots.astype(np.float64), counts)
+    t_star = np.asarray(params.default_time())
+    deadline = arrival + t_star / u
+    return TaskSet(arrival, deadline, params, u)
+
+
 def generate_online(offline_util: float = 0.4, online_util: float = 1.6,
                     seed: int = 0, library: DvfsParams | None = None,
                     horizon: int = DAY_SLOTS) -> TaskSet:

@@ -1,0 +1,300 @@
+"""Event-driven online engine: exact DRS power-off accounting and the
+vectorized placement path.
+
+The old ``drs_sweep`` booked ``t_sweep - on_since`` at whatever arrival
+slot the sweep happened to land on; the event engine books every power-off
+at its exact event time ``mu + rho``.  These tests pin the analytic
+consequences (sparse-arrival idle energy, gap invariance, span exactness)
+and the bit-identity of the scalar and vectorized placement paths.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cluster as cl
+from repro.core import machines, online, scheduling, single_task, tasks
+from repro.core.dvfs import DvfsParams
+from repro.core.engine import ClusterEngine
+
+
+@pytest.fixture(scope="module")
+def library():
+    return tasks.app_library()
+
+
+def sparse_ts(n=40, gap=37, seed=5, scale=1, library=None):
+    """Short tasks at arrival slots ``gap`` apart: service << gap, so every
+    server powers off between arrivals (the regime the sweep overbilled)."""
+    rng = np.random.default_rng(seed)
+    lib = library if library is not None else tasks.app_library()
+    rows, us = [], []
+    for _ in range(n):
+        app = lib[int(rng.integers(20))]
+        rows.append(DvfsParams(app.p0, app.gamma, app.c, app.big_d * scale,
+                               app.delta, app.t0 * scale))
+        us.append(float(rng.uniform(0.3, 0.9)))
+    params = DvfsParams.stack(rows)
+    arrival = (1.0 + gap * np.arange(n)).astype(np.float64)
+    t_star = np.asarray(params.default_time())
+    deadline = arrival + t_star / np.asarray(us)
+    return tasks.TaskSet(arrival, deadline, params, np.asarray(us))
+
+
+# ---------------------------------------------------------------------------
+# Exact power-off accounting (the drs_sweep overbilling fix).
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_idle_is_analytic(library):
+    """l=1, one task per visit, gaps >> rho: every cycle idles exactly rho,
+    so E_idle == P_idle * rho * n to 1e-9 rel (Eq. 7 with exact events)."""
+    ts = sparse_ts(library=library)
+    r = online.schedule_online(ts, l=1, theta=1.0, algorithm="edl",
+                               use_dvfs=False)
+    assert r.violations == 0
+    assert r.e_idle == pytest.approx(cl.P_IDLE * cl.RHO * len(ts), rel=1e-9)
+    # every task re-wakes the single server: overhead is exact too
+    assert r.e_overhead == pytest.approx(cl.DELTA_ON * len(ts), rel=1e-9)
+
+
+def test_idle_invariant_to_arrival_free_gaps(library):
+    """Dilating the arrival gaps (inserting arrival-free slots) must not
+    change E_idle: power-off events bill mu + rho - on_since regardless of
+    when the next arrival lands.  (The old sweep billed the full gap.)"""
+    base = sparse_ts(gap=37, library=library)
+    for gap in (101, 370, 97911):
+        dilated = sparse_ts(gap=gap, library=library)
+        for l in (1, 2):
+            r0 = online.schedule_online(base, l=l, theta=1.0,
+                                        algorithm="edl", use_dvfs=False)
+            r1 = online.schedule_online(dilated, l=l, theta=1.0,
+                                        algorithm="edl", use_dvfs=False)
+            assert r1.e_idle == pytest.approx(r0.e_idle, rel=1e-9), \
+                (gap, l)
+            assert r1.e_overhead == pytest.approx(r0.e_overhead, rel=1e-9)
+
+
+def test_removed_overcharge_matches_arrival_gap_derivation(library):
+    """The delta vs the old sweep accounting is exactly the accumulated
+    arrival-gap overcharge.  With l=1, one task per gap, service w_i and
+    integer arrivals every ``gap`` slots, the old sweep billed the full
+    ``gap`` for each of the first n-1 cycles (power-off observed only at
+    the next arrival) and the exact ``w_last + rho`` at finalize; the event
+    engine bills ``w_i + rho`` everywhere.  So
+
+        e_idle_old - e_idle_new = P_idle * sum_{i<n-1} (gap - w_i - rho).
+    """
+    gap = 37
+    ts = sparse_ts(gap=gap, library=library)
+    r = online.schedule_online(ts, l=1, theta=1.0, algorithm="edl",
+                               use_dvfs=False)
+    w = np.asarray(ts.params.default_time())
+    assert np.all(w + cl.RHO < gap)  # the sweep regime the test targets
+    overcharge = cl.P_IDLE * float(np.sum(gap - w[:-1] - cl.RHO))
+    # old booking: first n-1 cycles billed `gap - w_i` idle each (span gap,
+    # busy w_i), the last cycle billed exactly rho at finalize.
+    e_idle_old = cl.P_IDLE * (float(np.sum(gap - w[:-1])) + cl.RHO)
+    assert e_idle_old - r.e_idle == pytest.approx(overcharge, rel=1e-9)
+
+
+def test_append_late_noop_arrival_adds_only_own_cycle(library):
+    """Regression for the sweep overbilling: appending one arbitrarily late
+    arrival must add exactly that task's own cycle (rho idle + one turn-on)
+    — under the old sweep it also re-billed every still-off server's gap."""
+    base = sparse_ts(n=20, library=library)
+    extra_at = float(base.arrival[-1]) + 1.0e6
+    extra = tasks.TaskSet(
+        np.asarray([extra_at]),
+        np.asarray([extra_at + float(base.t_star[0]) / 0.5]),
+        base.params[np.asarray([0])], np.asarray([0.5]))
+    r0 = online.schedule_online(base, l=1, theta=1.0, algorithm="edl",
+                                use_dvfs=False)
+    r1 = online.schedule_online(base.concat(extra), l=1, theta=1.0,
+                                algorithm="edl", use_dvfs=False)
+    assert r1.e_idle == pytest.approx(r0.e_idle + cl.P_IDLE * cl.RHO,
+                                      rel=1e-9)
+    assert r1.e_overhead == pytest.approx(r0.e_overhead + cl.DELTA_ON,
+                                          rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_power_off_span_is_exact_for_any_settle_times(seed):
+    """Engine property: however sparse or irregular the settle times, every
+    power-off books exactly mu_srv + rho - on_since."""
+    rng = np.random.default_rng(seed)
+    eng = ClusterEngine(l=2, rho=3, p_idle=10.0, delta_on=5.0)
+    expected_on_time = 0.0
+    t = 0.0
+    on_since = {}
+    mu_srv = {}
+    for _ in range(40):
+        t += float(rng.uniform(0.1, 50.0))           # arbitrary gaps
+        eng.settle(t)
+        # replicate the event rule on the shadow state
+        for sid in list(on_since):
+            if mu_srv[sid] + eng.rho <= t + 1e-9:
+                expected_on_time += mu_srv[sid] + eng.rho - on_since[sid]
+                del on_since[sid]
+        booked = float(eng._on_time[: eng.n_servers].sum())
+        assert booked == pytest.approx(expected_on_time, rel=1e-12,
+                                       abs=1e-9)
+        if rng.uniform() < 0.7:
+            pid = eng.acquire_pair(t)
+            sid = pid // eng.l
+            if sid not in on_since:
+                on_since[sid] = t
+                mu_srv[sid] = t
+            dur = float(rng.uniform(0.1, 8.0))
+            eng.assign(pid, t, dur)
+            mu_srv[sid] = max(mu_srv[sid], t + dur)
+    eng.finalize()
+    for sid, since in on_since.items():
+        expected_on_time += mu_srv[sid] + eng.rho - since
+    assert float(eng._on_time[: eng.n_servers].sum()) == \
+        pytest.approx(expected_on_time, rel=1e-12, abs=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_e_idle_nonnegative_any_pattern(seed, library):
+    """e_idle >= 0 and the Eq. 7 identity holds for every arrival pattern
+    (including fractional arrivals)."""
+    rng = np.random.default_rng(100 + seed)
+    pattern = tasks.TRACE_PATTERNS[seed % len(tasks.TRACE_PATTERNS)]
+    ts = tasks.generate_trace(200, pattern=pattern, horizon=300,
+                              seed=seed, library=library)
+    if seed % 2:  # perturb to fractional arrivals
+        frac = rng.uniform(0.0, 0.999, len(ts))
+        ts = tasks.TaskSet(ts.arrival - frac, ts.deadline, ts.params,
+                           ts.utilization)
+    l = int(rng.choice([1, 2, 4]))
+    r = online.schedule_online(ts, l=l, theta=0.9, algorithm="edl")
+    assert r.e_idle >= 0.0
+    assert r.e_overhead >= 0.0
+    assert r.e_total == pytest.approx(r.e_run + r.e_idle + r.e_overhead)
+
+
+def test_settle_time_does_not_change_booking():
+    """settle(t) and settle(t + huge) book the same span for an event that
+    already occurred (the sweep used to bill up to its own call time)."""
+    spans = []
+    for late in (5.0, 5.0e7):
+        eng = ClusterEngine(l=1, rho=2, p_idle=1.0, delta_on=0.0)
+        pid = eng.acquire_pair(0.0)
+        eng.assign(pid, 0.0, 1.5)        # off event at 3.5
+        eng.settle(late)
+        spans.append(float(eng._on_time[0]))
+    assert spans[0] == spans[1] == pytest.approx(3.5)
+
+
+# ---------------------------------------------------------------------------
+# Fractional arrivals (ceil semantics).
+# ---------------------------------------------------------------------------
+
+
+def test_fractional_arrivals_never_start_early(library):
+    """A task arriving at 3.7 is grouped at slot 4, not slot 3: no
+    assignment may start before its arrival, and its DVFS window is
+    d - ceil(a), not the wider d - floor(a)."""
+    ts0 = tasks.generate_trace(60, pattern="uniform", horizon=50, seed=3,
+                               library=library)
+    frac = np.random.default_rng(0).uniform(0.01, 0.99, len(ts0))
+    ts = tasks.TaskSet(ts0.arrival - frac, ts0.deadline, ts0.params,
+                       ts0.utilization)
+    for placement in ("scalar", "vector"):
+        r = online.schedule_online(ts, l=2, theta=0.9, algorithm="edl",
+                                   placement=placement)
+        for a in r.assignments:
+            assert a.start >= ts.arrival[a.task] - 1e-9, \
+                (a.task, a.start, ts.arrival[a.task])
+
+
+def test_online_window_uses_ceil(library):
+    mcs = machines.reference_classes()
+    arrival = np.asarray([2.3])
+    ts = tasks.TaskSet(arrival, np.asarray([50.0]),
+                       library[np.asarray([0])], np.asarray([0.5]))
+    assert online.arrival_slots(ts)[0] == 3.0
+    cfgs = online.online_configs(ts, mcs, use_dvfs=False)
+    # window is d - ceil(a) = 47, not d - floor(a) = 48
+    assert bool(cfgs[0].feasible[0]) == (float(ts.t_star[0]) <= 47.0 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Scalar vs vectorized placement: bit-identical.
+# ---------------------------------------------------------------------------
+
+
+def _fields(a):
+    return (a.task, a.pair, a.start, a.finish, a.v, a.fc, a.fm, a.power,
+            a.energy, a.readjusted, a.class_id)
+
+
+@pytest.mark.parametrize("alg", ["edl", "bin"])
+def test_vector_placement_bit_identical_mixed_classes(alg, library):
+    """EDL/bin online results are bit-identical between the scalar and
+    vectorized placement paths on a ~1k-task mixed-class horizon."""
+    ts = tasks.generate_online(0.05, 0.45, seed=11, horizon=300,
+                               library=library)
+    assert len(ts) > 900
+    kw = dict(l=2, theta=0.9, algorithm=alg,
+              classes=("gtx-1080ti", "tpu-v5e"))
+    r_s = online.schedule_online(ts, placement="scalar", **kw)
+    r_v = online.schedule_online(ts, placement="vector", **kw)
+    assert r_v.e_total == r_s.e_total           # bit-for-bit
+    assert r_v.e_idle == r_s.e_idle
+    assert r_v.e_overhead == r_s.e_overhead
+    assert (r_v.n_pairs, r_v.n_servers, r_v.violations) == \
+        (r_s.n_pairs, r_s.n_servers, r_s.violations)
+    assert len(r_v.assignments) == len(r_s.assignments)
+    for a, b in zip(r_s.assignments, r_v.assignments):
+        assert _fields(a) == _fields(b)
+
+
+@pytest.mark.parametrize("l,theta", [(1, 0.8), (4, 1.0), (16, 0.9)])
+def test_vector_placement_bit_identical_homogeneous(l, theta, library):
+    ts = tasks.generate_online(0.05, 0.3, seed=7, horizon=200,
+                               library=library)
+    r_s = online.schedule_online(ts, l=l, theta=theta, placement="scalar",
+                                 algorithm="edl")
+    r_v = online.schedule_online(ts, l=l, theta=theta, placement="vector",
+                                 algorithm="edl")
+    assert r_v.e_total == r_s.e_total
+    for a, b in zip(r_s.assignments, r_v.assignments):
+        assert _fields(a) == _fields(b)
+
+
+def test_unknown_placement_rejected(library):
+    with pytest.raises(ValueError):
+        online.schedule_online(sparse_ts(n=2, library=library),
+                               placement="warp")
+
+
+# ---------------------------------------------------------------------------
+# Shared no-DVFS config builder (the deduped (1,1,1) fallback).
+# ---------------------------------------------------------------------------
+
+
+def test_default_config_builders_are_one_implementation(library):
+    """scheduling.default_config and machines.default_configs must both be
+    the shared single_task.no_dvfs_config, bit-for-bit."""
+    ts = tasks.generate_offline(0.05, seed=9, library=library)
+    ref = scheduling.default_config(ts)
+    via_classes = machines.default_configs(
+        ts, machines.reference_classes())[0]
+    direct = single_task.no_dvfs_config(ts.params,
+                                        ts.deadline - ts.arrival)
+    for a, b, c in zip(ref, via_classes, direct):
+        if isinstance(a, np.ndarray):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, c)
+        else:
+            assert a == b == c
+
+
+def test_no_dvfs_flags_consistent(library):
+    ts = tasks.generate_offline(0.05, seed=4, library=library)
+    cfg = single_task.no_dvfs_config(ts.params, ts.deadline - ts.arrival)
+    np.testing.assert_array_equal(np.asarray(cfg.feasible),
+                                  ~np.asarray(cfg.deadline_prior))
+    np.testing.assert_array_equal(cfg.t_hat, cfg.t_min)
+    assert cfg.n_deadline_prior == int(np.sum(cfg.deadline_prior))
