@@ -32,9 +32,12 @@ def run(groups: int = 3, utils=(0.2, 0.4, 0.8), ls=(1, 4, 16),
             for l in ls:
                 for alg in ALGOS:
                     for use_dvfs in (False, True):
+                        # bound=False: e_bound is (task_set)-invariant
+                        # across the swept (l, alg, dvfs) axes.
                         r = scheduling.schedule_offline(
                             ts, l=l, theta=theta, algorithm=alg,
-                            use_dvfs=use_dvfs, use_kernel=use_kernel)
+                            use_dvfs=use_dvfs, use_kernel=use_kernel,
+                            bound=False)
                         key = f"U{u}/l{l}/{alg}{'+dvfs' if use_dvfs else ''}"
                         d = out.setdefault(key, {
                             "e_total": [], "saving": [], "pairs": [],

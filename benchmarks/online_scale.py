@@ -35,6 +35,7 @@ import time
 from typing import Dict, Optional
 
 from benchmarks.common import record
+from repro.core import bounds, cluster as cl
 from repro.core import online, tasks
 
 
@@ -52,8 +53,12 @@ def run_one(n_tasks: int, pattern: str, l: int = 4, theta: float = 0.9,
     cfgs = online.online_configs(ts, mcs, use_kernel=use_kernel)
     t_solve = time.time() - t0
 
+    b = bounds.theoretical_bound(ts, classes=mcs, l=l, rho=cl.RHO)
+
+    # ``bound=False``: the bound is computed once above; the timed runs
+    # measure the simulation hot path only.
     kw = dict(l=l, theta=theta, algorithm="edl", cfgs=cfgs,
-              use_kernel=use_kernel)
+              use_kernel=use_kernel, bound=False)
     if scalar:
         # Warm the deferred-readjustment solver compile out of the timings
         # so the vector/scalar ratio is compile-free.  (A smaller warmup
@@ -69,6 +74,7 @@ def run_one(n_tasks: int, pattern: str, l: int = 4, theta: float = 0.9,
         "n_tasks": len(ts), "pattern": pattern, "solve_s": t_solve,
         "vector_s": t_vec, "vector_tasks_per_s": len(ts) / t_vec,
         "e_total": r_vec.e_total, "e_idle": r_vec.e_idle,
+        "e_bound": b.e_bound, "bound_gap": r_vec.e_total / b.e_bound - 1.0,
         "violations": r_vec.violations, "n_pairs": r_vec.n_pairs,
     }
     if scalar:

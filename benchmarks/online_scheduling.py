@@ -28,10 +28,13 @@ def run(groups: int = 2, u_off: float = 0.1, u_on: float = 0.4,
             for alg in ("edl", "bin"):
                 for use_dvfs in (False, True):
                     th = theta if use_dvfs else 1.0
+                    # bound=False: e_bound is (task_set)-invariant across
+                    # the swept (l, alg, dvfs) axes.
                     r = online.schedule_online(ts, l=l, theta=th,
                                                algorithm=alg,
                                                use_dvfs=use_dvfs,
-                                               use_kernel=use_kernel)
+                                               use_kernel=use_kernel,
+                                               bound=False)
                     key = f"l{l}/{alg}{'+dvfs' if use_dvfs else ''}"
                     d = out.setdefault(key, {"run": [], "idle": [],
                                              "ovh": [], "viol": 0})

@@ -47,6 +47,11 @@ def main(argv=None):
     online_scale.run_one(100000 if args.full else 20000, "uniform",
                          verbose=False)
 
+    print("# --- Offline scale (shared placement subsystem) ---", flush=True)
+    from benchmarks import offline_scale
+    offline_scale.run_one(100000 if args.full else 20000, "edl",
+                          time_kernel=False, verbose=False)
+
     if not args.skip_roofline:
         print("# --- Roofline (deliverable g; from dry-run JSONs) ---",
               flush=True)

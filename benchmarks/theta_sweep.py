@@ -29,8 +29,10 @@ def run_offline(groups=3, util=0.4, ls=(1, 4, 16), verbose=True) -> Dict:
         base = cl.baseline_energy(ts)
         for l in ls:
             for th in THETAS:
+                # bound=False: e_bound is (task_set, classes)-invariant, so
+                # re-solving it per swept (l, theta) point is pure overhead.
                 r = scheduling.schedule_offline(ts, l=l, theta=th,
-                                                algorithm="edl")
+                                                algorithm="edl", bound=False)
                 out.setdefault((l, th), []).append(1 - r.e_total / base)
     summary = {f"l{l}/theta{th}": float(np.mean(v))
                for (l, th), v in sorted(out.items())}
@@ -53,11 +55,12 @@ def run_online(groups=2, u_off=0.1, u_on=0.4, horizon=400, ls=(1, 4, 16),
                                    horizon=horizon)
         for l in ls:
             rb = online.schedule_online(ts, l=l, theta=1.0, algorithm="edl",
-                                        use_dvfs=False)
+                                        use_dvfs=False, bound=False)
             base_tot.setdefault(l, []).append(rb.e_total)
             for th in THETAS:
                 r = online.schedule_online(ts, l=l, theta=th,
-                                           algorithm="edl", use_dvfs=True)
+                                           algorithm="edl", use_dvfs=True,
+                                           bound=False)
                 out.setdefault((l, th), []).append(
                     (r.e_run, r.e_idle, r.e_overhead, r.e_total))
     summary = {}

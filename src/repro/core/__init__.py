@@ -6,8 +6,15 @@ that feeds roofline-derived LM jobs into the same algorithms.
 Architecture (top to bottom)::
 
     policies            scheduling.schedule_offline / online.schedule_online
-                        (Algorithms 1-6: packing order + pair-selection
-                        rules, min-energy-feasible class first)
+                        (Algorithms 1-6: ordering, arrival grouping, result
+                        assembly incl. the bounds.theoretical_bound e_bound
+                        column; two thin drivers over one placement core)
+        |
+    placement           placement.PlacementContext - THE pair-selection
+                        subsystem (per-class compact pools, batched
+                        worst-fit frontier + theta-rows, pooled first/best
+                        fit, per-task reference loop; offline == the
+                        degenerate one-group-at-t=0 case)
         |
     machine classes     machines.MachineClass / REGISTRY - per-class task
                         constants + scaling box; configure_classes runs
@@ -33,8 +40,9 @@ See docs/ARCHITECTURE.md for the full picture and docs/EQUATIONS.md for the
 equation/algorithm -> code map.
 """
 
-from repro.core import (cluster, dvfs, engine, jobs, machines, online,
-                        scheduling, single_task, tasks)
+from repro.core import (bounds, cluster, dvfs, engine, jobs, machines,
+                        online, placement, scheduling, single_task, tasks)
+from repro.core.bounds import theoretical_bound
 from repro.core.dvfs import DvfsParams, ScalingInterval, NARROW, WIDE
 from repro.core.engine import ClusterEngine
 from repro.core.machines import REGISTRY, MachineClass
@@ -48,7 +56,7 @@ __all__ = [
     "ClusterEngine", "MachineClass", "REGISTRY",
     "app_library", "generate_offline", "generate_online",
     "configure_tasks", "solve_unconstrained", "solve_with_deadline",
-    "schedule_offline", "schedule_online",
-    "cluster", "dvfs", "engine", "jobs", "machines", "online", "scheduling",
-    "single_task", "tasks",
+    "schedule_offline", "schedule_online", "theoretical_bound",
+    "bounds", "cluster", "dvfs", "engine", "jobs", "machines", "online",
+    "placement", "scheduling", "single_task", "tasks",
 ]

@@ -72,14 +72,23 @@ class ScheduleResult:
     assignments: List[Assignment]
     makespan: float = 0.0
     feasible_pairs: bool = True
+    #: the §5 analytical lower bound on e_total for this task set
+    #: (repro.core.bounds.theoretical_bound); 0.0 when not computed.
+    e_bound: float = 0.0
 
     @property
     def e_total(self) -> float:
         return self.e_run + self.e_idle + self.e_overhead
 
+    @property
+    def bound_gap(self) -> float:
+        """Achieved-vs-bound: ``e_total / e_bound - 1`` (0 == optimal)."""
+        return self.e_total / self.e_bound - 1.0 if self.e_bound > 0 else 0.0
+
     def summary(self) -> dict:
         return dict(algorithm=self.algorithm, e_run=self.e_run, e_idle=self.e_idle,
                     e_overhead=self.e_overhead, e_total=self.e_total,
+                    e_bound=self.e_bound,
                     n_pairs=self.n_pairs, n_servers=self.n_servers,
                     violations=self.violations, makespan=self.makespan)
 

@@ -161,6 +161,21 @@ class ClusterEngine:
         self.n_pairs += 1
         return pid
 
+    def open_pairs(self, class_ids: np.ndarray) -> int:
+        """Bulk :meth:`open_pair`: one fresh standalone pair per entry of
+        ``class_ids`` (offline mode), all free at ``mu0 = 0``.  Returns the
+        first new pair id; the block is contiguous and id-ascending — the
+        bulk primitive behind the offline deadline-prior pinning phase."""
+        assert not self.server_mode
+        k = int(np.shape(class_ids)[0])
+        self._grow_pairs(k)
+        base = self.n_pairs
+        self._mu[base: base + k] = 0.0
+        self._busy[base: base + k] = 0.0
+        self._cls[base: base + k] = class_ids
+        self.n_pairs += k
+        return base
+
     def new_server(self, t: float, class_id: int = 0) -> int:
         """Build and power on a server of ``l`` fresh pairs; returns its id."""
         assert self.server_mode
@@ -267,6 +282,16 @@ class ClusterEngine:
             cmask = self._cls[: self.n_pairs] == class_id
             mask = cmask if mask is None else (mask & cmask)
         return mask
+
+    def pool_ids(self, class_id: Optional[int] = None) -> np.ndarray:
+        """Ascending ids of the currently assignable pairs — the compact-pool
+        snapshot primitive of :mod:`repro.core.placement`: every pair
+        offline, pairs of powered-on servers online, optionally restricted
+        to one machine class."""
+        mask = self.eligible_mask(class_id)
+        if mask is None:
+            return np.arange(self.n_pairs, dtype=np.int64)
+        return np.flatnonzero(mask)
 
     def worst_fit(self, class_id: Optional[int] = None) -> int:
         """The pair with the smallest mu (SPT; ties -> smallest id), or -1."""

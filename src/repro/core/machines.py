@@ -170,6 +170,17 @@ def reference_classes(p_idle: float = cl.P_IDLE,
     return (MachineClass("default", p_idle=p_idle, delta_on=delta_on),)
 
 
+def resolve_classes(classes, p_idle: float = cl.P_IDLE,
+                    delta_on: float = cl.DELTA_ON) -> Tuple[MachineClass, ...]:
+    """Class-mix argument -> MachineClass tuple: ``None`` is the homogeneous
+    default (one identity class with the given scalar constants), anything
+    else a sequence of registry names and/or instances.  The ONE resolver
+    shared by both schedulers and :mod:`repro.core.bounds`."""
+    if classes is None:
+        return reference_classes(p_idle=p_idle, delta_on=delta_on)
+    return get_classes(classes)
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 1 across classes.
 # ---------------------------------------------------------------------------

@@ -29,18 +29,15 @@ The bin-packing baseline (Algorithm 6) replaces the pair-selection rule with
 worst-fit on utilization for the offline batch and first-fit for online
 arrivals, with no readjustment - the heuristic used by Liu et al. [41].
 
-Placement is vectorized (``placement="vector"``, the default): each arrival
-group's EDF-ordered class-preference probes are batched into array ops over
-the engine's ``mu``/``class_id`` columns - the group's tasks are matched
-against the k smallest-``mu`` eligible pairs of their primary class in one
-shot, with a proven-equivalence prefix check (fits at the optimal length,
-and no assigned pair re-enters the worst-fit frontier) - and only the tail
-past the first collision (theta-readjustment, class fallback, fresh-server
-power-on, or a worst-fit tie) goes through the scalar per-task loop.  Both
-paths are bit-identical by construction (``tests/test_event_engine.py``
-pins this on a mixed-class horizon); ``placement="scalar"`` keeps the pure
-per-task reference loop for tests and benchmarks
-(``benchmarks/online_scale.py`` guards the speedup).
+This module is a thin *driver*: every pair-selection path — the per-class
+compact pools, the batched EDF-prefix placement with θ-readjustment rows,
+the pooled first-fit probes, the lazy-heap scalar finish and the per-task
+reference loop — lives in the shared placement subsystem
+(:class:`repro.core.placement.PlacementContext`), which also serves the
+offline batch scheduler.  ``placement="vector"`` (default) runs the
+batched paths, ``placement="scalar"`` the reference loop; both are
+bit-identical (``tests/test_event_engine.py`` pins this on a mixed-class
+horizon, ``benchmarks/online_scale.py`` guards the speedup).
 
 Cluster state lives in :class:`~repro.core.engine.ClusterEngine` (the same
 vectorized pair/server arrays the offline scheduler packs into, including
@@ -59,27 +56,27 @@ Energy accounting follows Eq. (7) with per-class constants:
               + sum_k P_idle[k] * idle periods of class k
               + sum_k Delta[k] * (class-k pair turn-ons)
 
+and every result reports ``e_bound``, the §5 analytical lower bound
+(:func:`repro.core.bounds.theoretical_bound` with the DRS floors).
+
 See docs/EQUATIONS.md for the full equation/algorithm -> code map.
 """
 
 from __future__ import annotations
 
-import heapq
 from typing import List, Optional
 
 import numpy as np
 
-from repro.core import cluster as cl
+from repro.core import bounds, cluster as cl
 from repro.core import dvfs, machines
 from repro.core.dvfs import ScalingInterval
 from repro.core.engine import ClusterEngine
-from repro.core.scheduling import (PendingRow, chosen_feasibility,
-                                   count_violations, fill_readjusted,
-                                   make_assignment)
+from repro.core.placement import PendingRow, PlacementContext
+from repro.core.scheduling import (chosen_feasibility, count_violations,
+                                   fill_readjusted)
 from repro.core.single_task import TaskConfig
 from repro.core.tasks import TaskSet
-
-_EPS = 1e-9
 
 
 def arrival_slots(task_set: TaskSet) -> np.ndarray:
@@ -96,9 +93,9 @@ def _slot_groups(task_set: TaskSet):
     slots = arrival_slots(task_set).astype(np.int64)
     order = np.argsort(slots, kind="stable")
     uniq, first = np.unique(slots[order], return_index=True)
-    bounds = np.append(first, order.size)
+    bounds_ = np.append(first, order.size)
     return [(int(s), order[a:b])
-            for s, a, b in zip(uniq, bounds[:-1], bounds[1:])]
+            for s, a, b in zip(uniq, bounds_[:-1], bounds_[1:])]
 
 
 def online_configs(task_set: TaskSet, mcs, use_dvfs: bool = True,
@@ -126,7 +123,8 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                     delta_on: float = cl.DELTA_ON,
                     use_kernel: bool = False,
                     classes=None, placement: str = "vector",
-                    cfgs: Optional[List[TaskConfig]] = None) -> cl.ScheduleResult:
+                    cfgs: Optional[List[TaskConfig]] = None,
+                    bound: bool = True) -> cl.ScheduleResult:
     """Run the online simulation end to end (Algorithms 4-6).
 
     ``algorithm`` is ``"edl"`` (Algorithm 5, SPT + theta-readjustment) or
@@ -138,14 +136,15 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     or the per-task reference loop (``"scalar"``); both produce bit-identical
     schedules.  ``cfgs`` injects precomputed :func:`online_configs` output
     (must match ``task_set``/``classes``/``use_dvfs``/``interval``).
+    ``bound=False`` skips the ``e_bound`` solve (benchmarks timing the
+    simulation hot path).
     """
     algorithm = algorithm.lower()
     if algorithm not in ("edl", "bin"):
         raise ValueError(f"unknown online algorithm {algorithm!r}")
     if placement not in ("vector", "scalar"):
         raise ValueError(f"unknown placement mode {placement!r}")
-    mcs = machines.reference_classes(p_idle=p_idle, delta_on=delta_on) \
-        if classes is None else machines.get_classes(classes)
+    mcs = machines.resolve_classes(classes, p_idle=p_idle, delta_on=delta_on)
 
     n = len(task_set)
     deadline = np.asarray(task_set.deadline, dtype=np.float64)
@@ -154,13 +153,14 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
         cfgs = online_configs(task_set, mcs, use_dvfs=use_dvfs,
                               interval=interval, use_kernel=use_kernel)
     order_cls = machines.class_order(cfgs)          # [C, n]
-    primary = order_cls[0]
-    pre = _edl_precompute(cfgs, order_cls) \
-        if placement == "vector" and algorithm == "edl" else None
 
     eng = ClusterEngine(l, servers=True, rho=rho, classes=mcs)
     assignments: List[cl.Assignment] = []
     pending: List[PendingRow] = []
+    ctx = PlacementContext(eng, cfgs, deadline, theta=theta,
+                           readjust=(algorithm == "edl"),
+                           assignments=assignments, pending=pending,
+                           order_cls=order_cls)
 
     for slot, idx in _slot_groups(task_set):
         t_now = float(slot)
@@ -170,23 +170,17 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
 
         if algorithm == "bin" and slot == 0:
             # Algorithm 6 offline phase: worst-fit on task utilization.
-            _binpack_offline(eng, deadline, idx, order, cfgs, order_cls,
-                             primary, t_now, assignments)
+            ctx.binpack_offline_util(idx, order, t_now)
             continue
 
         if placement == "vector":
             if algorithm == "bin":
-                _bin_place_group_vector(eng, idx, order, deadline, cfgs,
-                                        order_cls, primary, t_now,
-                                        assignments)
+                ctx.place_group_select(idx, order, t_now, "ff")
             else:
-                _edl_place_group_vector(eng, idx, order, deadline, cfgs,
-                                        order_cls, primary, t_now, theta,
-                                        assignments, pending, pre)
+                ctx.place_group_vector(idx, order, t_now)
         else:
-            _place_group_scalar(eng, idx, order, deadline, cfgs, order_cls,
-                                primary, t_now, theta, algorithm,
-                                assignments, pending)
+            ctx.place_group_scalar(idx, order, t_now,
+                                   "wf" if algorithm == "edl" else "ff")
 
     # Deferred theta-readjustment solves: one batched dispatch per class.
     fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs)
@@ -196,634 +190,13 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     violations = count_violations(
         assignments, deadline, chosen_feasibility(cfgs, assignments, n))
     mk = max((a.finish for a in assignments), default=0.0)
+    e_bound = bounds.theoretical_bound(
+        task_set, interval=interval, classes=mcs, l=l,
+        rho=rho).e_bound if bound else 0.0
     return cl.ScheduleResult(
         algorithm=f"online-{algorithm}{'+dvfs' if use_dvfs else ''}",
         e_run=e_run, e_idle=e_idle, e_overhead=e_overhead,
         n_pairs=eng.n_pairs, n_servers=n_servers,
         violations=violations, assignments=assignments, makespan=mk,
-        feasible_pairs=eng.feasible_pairs,
+        feasible_pairs=eng.feasible_pairs, e_bound=e_bound,
     )
-
-
-def _edl_precompute(cfgs: List[TaskConfig], order_cls: np.ndarray) -> dict:
-    """Per-run lookups for the vectorized EDL path: config columns as numpy
-    arrays (batch gathers) and as plain lists (the scalar-finish loop reads
-    per-task floats ~20x faster off a list than off a numpy scalar)."""
-    t_hat = [np.asarray(c.t_hat) for c in cfgs]
-    t_min = [np.asarray(c.t_min) for c in cfgs]
-    return {
-        "t_hat": t_hat,
-        "t_min": t_min,
-        "t_hat_l": [a.tolist() for a in t_hat],
-        "t_min_l": [a.tolist() for a in t_min],
-        "order_cols": order_cls.T.tolist() if len(cfgs) > 1 else None,
-        # record columns [v, fc, fm, p_hat, e_hat] stacked per class: one
-        # fancy-index gathers a whole group's records
-        "cols": [np.stack([np.asarray(c.v, np.float64),
-                           np.asarray(c.fc, np.float64),
-                           np.asarray(c.fm, np.float64),
-                           np.asarray(c.p_hat, np.float64),
-                           np.asarray(c.e_hat, np.float64)]) for c in cfgs],
-    }
-
-
-def _edl_place_group_vector(eng: ClusterEngine, idx, order,
-                            deadline: np.ndarray, cfgs: List[TaskConfig],
-                            order_cls: np.ndarray, primary: np.ndarray,
-                            t_now: float, theta: float,
-                            assignments: List[cl.Assignment],
-                            pending: List[PendingRow], pre: dict):
-    """Vectorized Algorithm-5 placement for one arrival group.
-
-    Worst-fit (SPT) placement is a sequential min-extraction process, but
-    it batches exactly under a frontier invariant: in EDF order, the
-    group's class-``c`` tasks land on the smallest-``mu`` eligible pairs of
-    class ``c`` — *provided* each task fits (at its optimal length, or via
-    a theta-readjustment window, whose pair ``mu`` is pinned to the task's
-    deadline) and no already-assigned pair's new ``mu`` drops back to (or
-    ties) the worst-fit frontier.  Both conditions are array ops over
-    per-class *compact pools* of the engine's ``mu``/``class_id`` columns:
-    a pool is the pair-id-ascending snapshot of the ON pairs of one class,
-    its candidate stream is the ``(mu, pair id)``-sorted frontier computed
-    once per group (stale entries drop out by exact ``mu`` comparison, a
-    power-on appends its fresh pairs), and ``min_new`` tracks the smallest
-    already-assigned finish time so a frontier re-entry is detected across
-    batch rounds.
-
-    The placement loop alternates: batch the longest provable EDF prefix,
-    then place the single violating task through the scalar rule — class
-    fallback, readjustment that does not batch, fresh-server power-on, an
-    exact ``mu`` tie — and resume batching while a round nets enough tasks
-    to pay for itself; otherwise (power-on ramp, saturated frontier) the
-    rest of the group runs the same scalar rule as a tight loop over the
-    pools.  All pair-state writes are deferred to one engine commit
-    (:meth:`~repro.core.engine.ClusterEngine.book_assignments` +
-    :meth:`~repro.core.engine.ClusterEngine.sync_mu`) and the group's
-    assignment records are gathered from the config columns in one shot.
-    Bit-identical to :func:`_place_group_scalar` by construction.
-    """
-    k = order.shape[0]
-    if k == 0:
-        return
-    gidx = np.asarray(idx)[order]                 # [k] task ids, EDF order
-    prim = primary[gidx]                          # [k] primary class per task
-    d = deadline[gidx]
-    multi = len(eng.classes) > 1
-    on_pairs = eng.on_pair_mask()
-    t_hat_cls = pre["t_hat"]
-    t_min_cls = pre["t_min"]
-
-    # Per-class pool state: [ids, mus, n] (capacity-grown append arrays),
-    # candidate stream [positions, recorded mus], fresh power-on positions,
-    # and the min already-assigned finish time (frontier re-entry guard).
-    pools = {}
-    cands = {}
-    fresh = {}
-    min_new = {}
-
-    def pool(c: int):
-        """Compact (pair-id ascending) snapshot of the ON pairs of class c,
-        kept in sync for the rest of the group (the engine itself is only
-        written at the group commit)."""
-        st = pools.get(c)
-        if st is None:
-            # on_pairs is the group-start snapshot: pairs acquired later in
-            # the group are appended/inserted explicitly, so the stale
-            # (shorter) mask only needs a size guard here.
-            ids = np.flatnonzero(
-                on_pairs & (eng.pair_class[: on_pairs.size] == c)) if multi \
-                else np.flatnonzero(on_pairs)
-            st = pools[c] = [ids, eng.mu[ids].astype(np.float64, copy=True),
-                             ids.size]
-            min_new[c] = np.inf
-        return st
-
-    def candidates(c: int, need: int):
-        """Up to ``need`` live frontier entries of class c as (positions,
-        recorded mus), ordered by ``(mu, pair id)``."""
-        ids, mus, n = pool(c)
-        st = cands.get(c)
-        if st is None:
-            kc = min(need, n)
-            m_live = mus[:n]
-            if kc and kc < n:
-                part = np.argpartition(m_live, kc - 1)[:kc]
-                cp = np.flatnonzero(m_live <= m_live[part].max())
-                cp = cp[np.lexsort((cp, m_live[cp]))][:kc]
-            else:
-                cp = np.argsort(m_live, kind="stable")
-            st = cands[c] = [cp, m_live[cp].copy()]
-        cp, cm = st
-        alive = pools[c][1][cp] == cm             # assigned entries drop out
-        if not alive.all():
-            cp, cm = cp[alive], cm[alive]
-            cands[c] = [cp, cm]
-        fr = fresh.get(c)
-        if fr:
-            fa = np.sort(np.asarray(fr, dtype=np.int64))
-            fa = fa[pools[c][1][fa] == t_now]     # consumed fresh drop out
-            if fa.size:
-                allp = np.concatenate([cp, fa])
-                allm = np.concatenate([cm, np.full(fa.size, t_now)])
-                o = np.lexsort((allp, allm))      # position order == id order
-                return allp[o][:need], allm[o][:need]
-        return cp[:need], cm[:need]
-
-    # Per-group record columns, filled by the batch rounds and the scalar
-    # violators; records and engine state are committed once at the end.
-    t_hat = np.empty(k)
-    uniq_prim = np.unique(prim)
-    for c in uniq_prim:
-        m = prim == c
-        t_hat[m] = t_hat_cls[int(c)][gidx[m]]
-    pid_col = np.empty(k, dtype=np.int64)
-    start_col = np.empty(k)
-    dur_col = t_hat.copy()
-    cls_col = prim.astype(np.int64, copy=True)
-    readj_col = np.zeros(k, dtype=bool)
-    base = len(assignments)
-
-    valid = np.empty(k, dtype=bool)
-    pos_sel = np.empty(k, dtype=np.int64)
-
-    def batch_round(pos0: int) -> int:
-        """Batch the longest provable EDF prefix of tasks[pos0:]; returns
-        the number of positions consumed."""
-        valid[pos0:] = False
-        if order_cols is None:                    # single class: no split
-            by_class = ((0, np.arange(pos0, k)),)
-        else:
-            sub = prim[pos0:]
-            by_class = tuple((int(c), pos0 + np.flatnonzero(sub == c))
-                             for c in np.unique(sub))
-        for c, tm in by_class:
-            cp, cm = candidates(int(c), tm.size)
-            kc = cp.size
-            if not kc:
-                continue
-            w = t_hat[tm[:kc]]
-            start = np.maximum(t_now, cm)
-            window = d[tm[:kc]] - start
-            fit = window >= w - _EPS              # fits at optimal length
-            if theta < 1.0:
-                # Algorithm 5's theta-readjustment batches under the same
-                # frontier check: the task occupies exactly its window, so
-                # its pair's new mu is pinned to the task's deadline.
-                t_min_c = t_min_cls[int(c)][gidx[tm[:kc]]]
-                readj = ~fit & (window >= np.maximum(theta * w, t_min_c)
-                                - _EPS)
-            else:
-                readj = np.zeros(kc, dtype=bool)
-            dur = np.where(fit, w, window)
-            ok = fit | readj
-            # no-collision: every already-assigned pair's new mu (previous
-            # rounds and this one) stays strictly above the next candidate
-            # (ties -> scalar fallback).
-            pm = np.minimum.accumulate(start + dur)
-            ok &= np.concatenate(([min_new[int(c)]],
-                                  np.minimum(pm[:-1], min_new[int(c)]))) > cm
-            nvalid = kc if ok.all() else int(np.argmin(ok))
-            if nvalid:
-                sel = tm[:nvalid]
-                valid[sel] = True
-                pos_sel[sel] = cp[:nvalid]
-                start_col[sel] = start[:nvalid]
-                dur_col[sel] = dur[:nvalid]
-                readj_col[sel] = readj[:nvalid]
-        cut = k if valid[pos0:].all() else pos0 + int(np.argmin(valid[pos0:]))
-        if cut == pos0:
-            return 0
-        if order_cols is None:
-            by_class = ((0, np.arange(pos0, cut)),)
-        else:
-            sub = prim[pos0:cut]
-            by_class = tuple((int(c), pos0 + np.flatnonzero(sub == c))
-                             for c in np.unique(sub))
-        for c, m in by_class:
-            ids, mus, _ = pools[int(c)]
-            pos = pos_sel[m]
-            new_mu = start_col[m] + dur_col[m]
-            mus[pos] = new_mu
-            pid_col[m] = ids[pos]
-            min_new[int(c)] = min(min_new[int(c)], float(new_mu.min()))
-        for i in np.flatnonzero(readj_col[pos0:cut]).tolist():
-            i += pos0
-            pending.append((base + i, int(gidx[i]), float(dur_col[i]),
-                            int(prim[i])))
-        return cut - pos0
-
-    def acquire(i: int, g: int, c: int):
-        """Fresh-server fallback: power on (live engine event), splice the
-        ``l`` new pairs into the class pool, assign the first one."""
-        pid = eng.acquire_pair(t_now, class_id=c)
-        st = pool(c)
-        ids, mus, n = st
-        pos = int(np.searchsorted(ids[:n], pid))
-        if pos == n:
-            if n + eng.l > ids.shape[0]:          # grow capacity, amortized
-                grow = max(n + eng.l, 2 * ids.shape[0])
-                st[0] = ids = np.concatenate(
-                    [ids, np.empty(grow - ids.shape[0], dtype=np.int64)])
-                st[1] = mus = np.concatenate(
-                    [mus, np.empty(grow - mus.shape[0])])
-        else:
-            # waking a lower-id server inserts mid-pool: shift the stored
-            # candidate/fresh positions past the insertion point.
-            st[0] = ids = np.insert(ids[:n], pos,
-                                    np.zeros(eng.l, dtype=np.int64))
-            st[1] = mus = np.insert(mus[:n], pos, np.zeros(eng.l))
-            if c in cands:
-                cp, cm = cands[c]
-                cands[c] = [np.where(cp >= pos, cp + eng.l, cp), cm]
-            if fresh.get(c):
-                fresh[c] = [p + eng.l if p >= pos else p for p in fresh[c]]
-        ids[pos: pos + eng.l] = pid + np.arange(eng.l)
-        mus[pos: pos + eng.l] = t_now
-        st[2] = n + eng.l
-        th = pre["t_hat_l"][c][g]
-        mus[pos] = t_now + th                     # a fresh pair is free *now*
-        if min_new[c] > t_now + th:
-            min_new[c] = t_now + th
-        fresh.setdefault(c, []).extend(range(pos + 1, pos + eng.l))
-        pid_col[i], start_col[i], dur_col[i], cls_col[i] = pid, t_now, th, c
-        return pos, pos != n
-
-    t_hat_l = pre["t_hat_l"]
-    t_min_l = pre["t_min_l"]
-    order_cols = pre["order_cols"]
-    readjust_on = theta < 1.0
-
-    def place_one(i: int):
-        """The scalar Algorithm-5 rule for one violating task, over the
-        same pools (argmin over a pool's contiguous mu column is worst-fit
-        with the identical lowest-pair-id tie-break)."""
-        g = int(gidx[i])
-        dd = d[i]
-        readj_col[i] = False      # may hold a stale beyond-cut batch verdict
-        for c in (order_cols[g] if order_cols is not None else (0,)):
-            ids, mus, n = pool(c)
-            if not n:
-                continue
-            j = int(mus[:n].argmin())
-            mu_j = mus[j]
-            start = t_now if mu_j < t_now else float(mu_j)
-            th = t_hat_l[c][g]
-            if dd - start >= th - _EPS:
-                mus[j] = start + th
-                if min_new[c] > start + th:
-                    min_new[c] = start + th
-                pid_col[i], start_col[i], dur_col[i], cls_col[i] = \
-                    ids[j], start, th, c
-                return
-            elif readjust_on:
-                t_theta = theta * th
-                t_mn = t_min_l[c][g]
-                if t_theta < t_mn:
-                    t_theta = t_mn
-                window = dd - start
-                if window >= t_theta - _EPS:
-                    mus[j] = start + window
-                    if min_new[c] > start + window:
-                        min_new[c] = start + window
-                    pending.append((base + i, g, window, c))
-                    pid_col[i], start_col[i], dur_col[i], cls_col[i] = \
-                        ids[j], start, window, c
-                    readj_col[i] = True
-                    return
-        acquire(i, g, int(prim[i]))
-
-    def finish_scalar(i0: int):
-        """The scalar rule for the rest of the group as a tight loop over a
-        lazy frontier heap: alive candidate-stream originals, pairs already
-        assigned this group, and outstanding fresh pairs, keyed ``(mu, pair
-        id)`` — exactly argmin's lowest-pair-id tie-break.  Entries go stale
-        by exact ``mu`` comparison; when the original stream runs dry while
-        uncovered pool entries exist, the loop degrades to plain argmin
-        over the pool.  Per-task reads come off plain python lists and the
-        record columns are written back in bulk.  Multi-class groups fall
-        back to the per-task rule, which also handles class fallback."""
-        if order_cols is not None:
-            for j in range(i0, k):
-                place_one(j)
-            return
-        gl = gidx.tolist()
-        dl = d.tolist()
-        th_l = t_hat_l[0]
-        tm_l = t_min_l[0]
-        pid_l, st_l, du_l, rj_l = [], [], [], []
-        ids, mus, n = pool(0)
-        cp, cm = candidates(0, k - i0)
-        heap = [(m, int(ids[p]), int(p), True)
-                for m, p in zip(cm.tolist(), cp.tolist())]
-        alive_orig = len(heap)
-        statics = alive_orig < n                  # uncovered pool entries?
-        if i0:
-            tpos = np.unique(np.searchsorted(ids[:n], pid_col[:i0]))
-            heap += [(float(mus[p]), int(ids[p]), int(p), False)
-                     for p in tpos.tolist()]
-        for p in fresh.get(0, ()):
-            if mus[p] == t_now:
-                heap.append((t_now, int(ids[p]), int(p), False))
-        heapq.heapify(heap)
-        heap_ok = True
-        for j in range(i0, k):
-            g = gl[j]
-            dd = dl[j]
-            top = None
-            if heap_ok:
-                while heap:
-                    e = heap[0]
-                    if mus[e[2]] == e[0]:
-                        top = e
-                        break
-                    heapq.heappop(heap)
-                    if e[3]:
-                        alive_orig -= 1
-                if top is None or (statics and alive_orig == 0):
-                    heap_ok = False
-                    top = None
-            if not heap_ok and n:
-                p = int(mus[:n].argmin())
-                top = (float(mus[p]), int(ids[p]), p, False)
-            if top is not None:
-                mu_p, pid, p = top[0], top[1], top[2]
-                start = t_now if mu_p < t_now else mu_p
-                th = th_l[g]
-                if dd - start >= th - _EPS:
-                    if heap_ok:
-                        heapq.heappop(heap)
-                        if top[3]:
-                            alive_orig -= 1
-                        heapq.heappush(heap, (start + th, pid, p, False))
-                    mus[p] = start + th
-                    pid_l.append(pid)
-                    st_l.append(start)
-                    du_l.append(th)
-                    rj_l.append(False)
-                    continue
-                if readjust_on:
-                    t_theta = theta * th
-                    t_mn = tm_l[g]
-                    if t_theta < t_mn:
-                        t_theta = t_mn
-                    window = dd - start
-                    if window >= t_theta - _EPS:
-                        if heap_ok:
-                            heapq.heappop(heap)
-                            if top[3]:
-                                alive_orig -= 1
-                            heapq.heappush(heap,
-                                           (start + window, pid, p, False))
-                        mus[p] = start + window
-                        pending.append((base + j, g, window, 0))
-                        pid_l.append(pid)
-                        st_l.append(start)
-                        du_l.append(window)
-                        rj_l.append(True)
-                        continue
-            pos, mid = acquire(j, g, 0)
-            ids, mus, n = pools[0]
-            if heap_ok:
-                if mid:
-                    # positions past the insertion point shifted by l
-                    heap = [(m_, pi_, p_ + eng.l if p_ >= pos else p_, o_)
-                            for m_, pi_, p_, o_ in heap]
-                npid = int(ids[pos])
-                heapq.heappush(heap, (float(mus[pos]), npid, pos, False))
-                for jj in range(1, eng.l):
-                    heapq.heappush(heap, (t_now, npid + jj, pos + jj, False))
-            pid_l.append(pid_col[j])
-            st_l.append(t_now)
-            du_l.append(dur_col[j])
-            rj_l.append(False)
-        pid_col[i0:] = pid_l
-        start_col[i0:] = st_l
-        dur_col[i0:] = du_l
-        readj_col[i0:] = rj_l
-
-    # Alternate batch rounds with single scalar violators while batching
-    # pays for itself; a round that nets only a few tasks (power-on ramp,
-    # saturated frontier) costs more than the scalar rule, so finish the
-    # group scalar from there.
-    i = 0
-    while i < k:
-        consumed = batch_round(i)
-        i += consumed
-        if i >= k:
-            break
-        place_one(i)
-        i += 1
-        if consumed < 8:
-            finish_scalar(i)
-            break
-
-    # ---- commit the group to the engine in one shot ------------------------
-    # (power-ons already wrote their pairs live; only assigned pairs moved,
-    # and for a pair assigned twice the chronologically last finish wins.)
-    eng.book_assignments(pid_col, start_col, dur_col)
-    _, last = np.unique(pid_col[::-1], return_index=True)
-    last = k - 1 - last
-    eng.sync_mu(pid_col[last], start_col[last] + dur_col[last])
-
-    # ---- gather the group's assignment records in EDF order ----------------
-    if order_cols is None:
-        mat = pre["cols"][0][:, gidx]
-    else:
-        mat = np.empty((5, k))
-        for c in np.unique(cls_col):
-            m = cls_col == c
-            mat[:, m] = pre["cols"][int(c)][:, gidx[m]]
-    v_l, fc_l, fm_l, p_l, e_l = mat.tolist()
-    finish = start_col + dur_col
-    assignments.extend(map(
-        cl.Assignment, gidx.tolist(), pid_col.tolist(), start_col.tolist(),
-        finish.tolist(), v_l, fc_l, fm_l, p_l, e_l, readj_col.tolist(),
-        cls_col.tolist()))
-
-
-def _bin_place_group_vector(eng: ClusterEngine, idx, order,
-                            deadline: np.ndarray, cfgs: List[TaskConfig],
-                            order_cls: np.ndarray, primary: np.ndarray,
-                            t_now: float,
-                            assignments: List[cl.Assignment]):
-    """Vectorized Algorithm-6 online placement for one arrival group.
-
-    First-fit probes become array ops over per-class *compact pools* —
-    snapshots of the eligible (ON, class-``c``) pairs in ascending pair-id
-    order, so ``argmax(fit)`` is exactly the scalar ``first_fit`` tie-break
-    — instead of rebuilding the full eligibility mask per probe.  Pools are
-    kept in sync with the engine within the group (assignments update the
-    pool ``mu``; a fresh-server power-on inserts its ``l`` pairs at their
-    sorted position).  Bit-identical to the scalar loop by construction.
-    """
-    mu_all = eng._mu
-    cls_all = eng._cls
-    on_pairs = eng.on_pair_mask()
-    pools = {}
-
-    def pool(c: int):
-        if c not in pools:
-            if len(eng.classes) > 1:
-                ids = np.flatnonzero(on_pairs & (cls_all[: on_pairs.size] == c))
-            else:
-                ids = np.flatnonzero(on_pairs)
-            pools[c] = [ids, mu_all[ids].copy()]
-        return pools[c]
-
-    for r in order:
-        gidx = int(idx[int(r)])
-        d = deadline[gidx]
-        placed = False
-        for c in order_cls[:, gidx]:
-            c = int(c)
-            cfg_c = cfgs[c]
-            t_hat = float(cfg_c.t_hat[gidx])
-            ids, mus = pool(c)
-            if not ids.size:
-                continue
-            starts = np.maximum(t_now, mus)
-            fit = d - starts >= t_hat - _EPS
-            if not fit.any():
-                continue
-            j = int(np.argmax(fit))
-            pid = int(ids[j])
-            start = float(starts[j])
-            eng.assign(pid, start, t_hat)
-            mus[j] = start + t_hat
-            assignments.append(make_assignment(gidx, pid, start, cfg_c,
-                                               class_id=c))
-            placed = True
-            break
-        if not placed:
-            c = int(primary[gidx])
-            cfg_c = cfgs[c]
-            pid = eng.acquire_pair(t_now, class_id=c)
-            ids, mus = pool(c)
-            pos = int(np.searchsorted(ids, pid))
-            new_ids = pid + np.arange(eng.l)
-            pools[c] = [np.insert(ids, pos, new_ids),
-                        np.insert(mus, pos, np.full(eng.l, t_now))]
-            ids, mus = pools[c]
-            start = max(t_now, float(eng.mu[pid]))
-            eng.assign(pid, start, float(cfg_c.t_hat[gidx]))
-            mus[pos] = start + float(cfg_c.t_hat[gidx])
-            assignments.append(make_assignment(gidx, pid, start, cfg_c,
-                                               class_id=c))
-
-
-def _place_group_scalar(eng: ClusterEngine, idx, order, deadline: np.ndarray,
-                        cfgs: List[TaskConfig], order_cls: np.ndarray,
-                        primary: np.ndarray, t_now: float, theta: float,
-                        algorithm: str,
-                        assignments: List[cl.Assignment],
-                        pending: List[PendingRow]):
-    """The per-task reference loop (Algorithm 5 EDL / Algorithm 6 online
-    first-fit): class preference order, engine selectors, θ-readjustment and
-    fresh-server fallback.  Also serves as the tail of the vectorized path
-    after its first collision."""
-    for r in order:
-        gidx = int(idx[int(r)])
-        d = deadline[gidx]
-
-        placed = False
-        for c in order_cls[:, gidx]:
-            c = int(c)
-            cfg_c = cfgs[c]
-            t_hat = float(cfg_c.t_hat[gidx])
-            if algorithm == "edl":
-                pid = eng.worst_fit(class_id=c)  # SPT: ON pair free first
-                if pid < 0:
-                    continue
-                start = max(t_now, float(eng.mu[pid]))
-                if d - start >= t_hat - _EPS:
-                    eng.assign(pid, start, t_hat)
-                    assignments.append(make_assignment(
-                        gidx, pid, start, cfg_c, class_id=c))
-                    placed = True
-                    break
-                elif theta < 1.0:
-                    t_theta = max(theta * t_hat, float(cfg_c.t_min[gidx]))
-                    window = d - start
-                    if window >= t_theta - _EPS:
-                        eng.assign(pid, start, window)
-                        pending.append((len(assignments), gidx, window, c))
-                        assignments.append(make_assignment(
-                            gidx, pid, start, cfg_c, duration=window,
-                            readjusted=True, class_id=c))
-                        placed = True
-                        break
-            else:  # bin: first-fit in pair-id order
-                pid = eng.first_fit(t_now, d, t_hat, class_id=c)
-                if pid >= 0:
-                    start = max(t_now, float(eng.mu[pid]))
-                    eng.assign(pid, start, t_hat)
-                    assignments.append(make_assignment(
-                        gidx, pid, start, cfg_c, class_id=c))
-                    placed = True
-                    break
-        if not placed:
-            c = int(primary[gidx])
-            cfg_c = cfgs[c]
-            pid = eng.acquire_pair(t_now, class_id=c)
-            start = max(t_now, float(eng.mu[pid]))
-            eng.assign(pid, start, float(cfg_c.t_hat[gidx]))
-            assignments.append(make_assignment(gidx, pid, start, cfg_c,
-                                               class_id=c))
-
-
-def _binpack_offline(eng: ClusterEngine, deadline: np.ndarray, idx, order,
-                     cfgs: List[TaskConfig], order_cls: np.ndarray,
-                     primary: np.ndarray, t_now: float,
-                     assignments: List[cl.Assignment]):
-    """Algorithm 6, lines 1-7: worst-fit on utilization, cap at 1.0.
-
-    The *optimal task utilization* is ``u_hat = t_hat / (d - a)``; the
-    worst-fit heuristic sends each task to the pair with the lowest current
-    utilization (among pairs of the candidate class), opening a new pair of
-    the task's primary class when no candidate fits.
-    """
-    util = np.zeros(0)
-
-    def grow():
-        nonlocal util
-        if util.shape[0] < eng.n_pairs:
-            util = np.concatenate([util,
-                                   np.zeros(eng.n_pairs - util.shape[0])])
-
-    for r in order:
-        gidx = int(idx[int(r)])
-        d = deadline[gidx]
-        grow()
-        placed = False
-        for c in order_cls[:, gidx]:
-            c = int(c)
-            cfg_c = cfgs[c]
-            t_hat = float(cfg_c.t_hat[gidx])
-            u_hat = t_hat / max(d - t_now, _EPS)
-            on = eng.eligible_mask(class_id=c)
-            if on is None:
-                on = np.ones(eng.n_pairs, dtype=bool)
-            if not on.any():
-                continue
-            pid = int(np.argmin(np.where(on, util[: eng.n_pairs], np.inf)))
-            start = max(t_now, float(eng.mu[pid]))
-            if util[pid] + u_hat > 1.0 + _EPS or d - start < t_hat - _EPS:
-                continue
-            eng.assign(pid, start, t_hat)
-            util[pid] += u_hat
-            assignments.append(make_assignment(gidx, pid, start, cfg_c,
-                                               class_id=c))
-            placed = True
-            break
-        if not placed:
-            c = int(primary[gidx])
-            cfg_c = cfgs[c]
-            t_hat = float(cfg_c.t_hat[gidx])
-            u_hat = t_hat / max(d - t_now, _EPS)
-            pid = eng.acquire_pair(t_now, class_id=c)
-            grow()
-            start = max(t_now, float(eng.mu[pid]))
-            eng.assign(pid, start, t_hat)
-            util[pid] += u_hat
-            assignments.append(make_assignment(gidx, pid, start, cfg_c,
-                                               class_id=c))

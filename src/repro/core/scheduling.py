@@ -12,7 +12,8 @@ All offline algorithms share the same three-phase structure:
    ranked min-energy-feasible first (:func:`repro.core.machines.class_order`).
 2. **Task packing** - deadline-prior tasks are pinned to fresh pairs first
    (they must start at t=0), then the energy-prior tasks are placed in EDF
-   order by the policy-specific rule, each a vectorized selector on the
+   order by the policy-specific rule, each a path of the shared placement
+   subsystem (:mod:`repro.core.placement`) over the
    :class:`~repro.core.engine.ClusterEngine` pair arrays, applied to each
    candidate class in preference order:
 
@@ -31,9 +32,21 @@ All offline algorithms share the same three-phase structure:
    A task no class can host lands on a fresh pair of its primary
    (min-energy feasible) class.
 
+   The offline batch is the placement subsystem's degenerate "one group at
+   ``t = 0``" case: ``placement="vector"`` (default) runs the batched
+   worst-fit frontier / pooled probes of
+   :class:`~repro.core.placement.PlacementContext`,
+   ``placement="scalar"`` the per-task reference loop over the engine
+   selectors — bit-identical by construction
+   (``tests/test_placement.py`` pins all four policies).
+
 3. **Algorithm 3** - the engine finalizer groups pairs into virtual servers
    of ``l`` per class; idle energy is ``P_idle * sum_j sum_k (F_j - tau_kj)``
    (Eq. 6) with the class's own ``P_idle``.
+
+Every result also reports ``e_bound``, the §5 analytical lower bound on
+its energy (:func:`repro.core.bounds.theoretical_bound`), so achieved
+savings can be read against the paper's ~36% ceiling.
 
 See docs/EQUATIONS.md for the full equation/algorithm -> code map.
 """
@@ -41,22 +54,21 @@ See docs/EQUATIONS.md for the full equation/algorithm -> code map.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import cluster as cl
+from repro.core import bounds, cluster as cl
 from repro.core import dvfs, machines, single_task
 from repro.core.dvfs import ScalingInterval
 from repro.core.engine import ClusterEngine
-from repro.core.machines import MachineClass
+from repro.core.machines import MachineClass, resolve_classes
+from repro.core.placement import (OFFLINE_RULES, PendingRow, PlacementContext,
+                                  make_assignment)
 from repro.core.single_task import TaskConfig
 from repro.core.tasks import TaskSet
 
 _EPS = 1e-9
-
-#: pending θ-readjustment row: (assignment_index, task_index, window, class_id)
-PendingRow = Tuple[int, int, float, int]
 
 
 def default_config(task_set: TaskSet) -> TaskConfig:
@@ -77,14 +89,6 @@ def configure(task_set: TaskSet, use_dvfs: bool,
                                        use_kernel=use_kernel)
 
 
-def resolve_classes(classes, p_idle: float = cl.P_IDLE,
-                    delta_on: float = cl.DELTA_ON) -> Tuple[MachineClass, ...]:
-    """Class-mix argument -> MachineClass tuple (None = homogeneous default)."""
-    if classes is None:
-        return machines.reference_classes(p_idle=p_idle, delta_on=delta_on)
-    return machines.get_classes(classes)
-
-
 def configure_all(task_set: TaskSet, use_dvfs: bool,
                   mcs: Sequence[MachineClass],
                   interval: ScalingInterval = dvfs.WIDE,
@@ -95,21 +99,6 @@ def configure_all(task_set: TaskSet, use_dvfs: bool,
     allowed = task_set.deadline - task_set.arrival
     return machines.configure_classes(task_set.params, allowed, mcs,
                                       interval, use_kernel=use_kernel)
-
-
-def make_assignment(task: int, pair: int, start: float, cfg: TaskConfig,
-                    duration: Optional[float] = None,
-                    readjusted: bool = False, class_id: int = 0) -> cl.Assignment:
-    """An assignment at the task's configured setting; a readjusted one gets
-    its finish pinned to ``start + duration`` and its DVFS fields filled in
-    later by :func:`fill_readjusted`."""
-    t = cfg.t_hat[task] if duration is None else duration
-    return cl.Assignment(task=task, pair=pair, start=float(start),
-                         finish=float(start + t), v=float(cfg.v[task]),
-                         fc=float(cfg.fc[task]), fm=float(cfg.fm[task]),
-                         power=float(cfg.p_hat[task]),
-                         energy=float(cfg.e_hat[task]), readjusted=readjusted,
-                         class_id=class_id)
 
 
 def fill_readjusted(assignments: List[cl.Assignment],
@@ -179,7 +168,9 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                      p_idle: float = cl.P_IDLE,
                      cfg: Optional[TaskConfig] = None,
                      use_kernel: bool = False,
-                     classes=None) -> cl.ScheduleResult:
+                     classes=None, placement: str = "vector",
+                     cfgs: Optional[List[TaskConfig]] = None,
+                     bound: bool = True) -> cl.ScheduleResult:
     """Run one offline scheduling algorithm end to end (Algorithms 1+2+3).
 
     ``classes`` selects the machine-class mix: ``None`` is the homogeneous
@@ -187,19 +178,28 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     code path), otherwise a sequence of registry names and/or
     :class:`~repro.core.machines.MachineClass` instances.  ``cfg`` (a
     precomputed single-class Algorithm-1 output) is only valid for the
-    homogeneous case.
+    homogeneous case; ``cfgs`` injects the full per-class
+    :func:`configure_all` output (must match ``task_set``/``classes``/
+    ``use_dvfs``/``interval``).  ``placement`` picks the batched array path
+    (``"vector"``, default) or the per-task reference loop (``"scalar"``);
+    both produce bit-identical schedules.  ``bound=False`` skips the
+    ``e_bound`` solve (benchmarks timing the packing hot path).
     """
     algorithm = algorithm.lower()
-    if algorithm not in ("edl", "edf-wf", "edf-bf", "lpt-ff"):
+    if algorithm not in OFFLINE_RULES:
         raise ValueError(f"unknown offline algorithm {algorithm!r}")
+    if placement not in ("vector", "scalar"):
+        raise ValueError(f"unknown placement mode {placement!r}")
     mcs = resolve_classes(classes, p_idle=p_idle)
     if cfg is not None:
         if len(mcs) > 1:
             raise ValueError("cfg= is only supported for a single class")
         cfgs = [cfg]
-    else:
+    elif cfgs is None:
         cfgs = configure_all(task_set, use_dvfs, mcs, interval,
                              use_kernel=use_kernel)
+    elif len(cfgs) != len(mcs):
+        raise ValueError("cfgs= needs one TaskConfig per machine class")
 
     n = len(task_set)
     deadline = np.asarray(task_set.deadline, dtype=np.float64)
@@ -208,6 +208,10 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     assignments: List[cl.Assignment] = []
     pending: List[PendingRow] = []
     eng = ClusterEngine(l, servers=False, classes=mcs)
+    ctx = PlacementContext(eng, cfgs, deadline, theta=theta,
+                           readjust=(algorithm == "edl"),
+                           assignments=assignments, pending=pending,
+                           order_cls=order_cls)
 
     # --- Phase 2a: tasks that are deadline-prior on their primary class,
     # each started at t=0 on a fresh pair of that class.
@@ -215,16 +219,21 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
         np.stack([np.asarray(c.deadline_prior, bool) for c in cfgs]),
         primary[None], axis=0)[0]
     dp_idx = np.nonzero(dp_primary)[0]
-    for t_idx in dp_idx[np.argsort(deadline[dp_idx], kind="stable")]:
-        t_idx = int(t_idx)
-        c = int(primary[t_idx])
-        pid = eng.open_pair(class_id=c)
-        eng.assign(pid, 0.0, float(cfgs[c].t_hat[t_idx]))
-        assignments.append(make_assignment(t_idx, pid, 0.0, cfgs[c],
-                                           class_id=c))
+    dp_order = dp_idx[np.argsort(deadline[dp_idx], kind="stable")]
+    if placement == "vector":
+        ctx.pin_fresh(dp_order)
+    else:
+        for t_idx in dp_order:
+            t_idx = int(t_idx)
+            c = int(primary[t_idx])
+            pid = eng.open_pair(class_id=c)
+            eng.assign(pid, 0.0, float(cfgs[c].t_hat[t_idx]))
+            assignments.append(make_assignment(t_idx, pid, 0.0, cfgs[c],
+                                               class_id=c))
 
     # --- Phase 2b: energy-prior tasks by the policy rule, trying classes in
-    # min-energy-feasible-first order.
+    # min-energy-feasible-first order — ONE group at t=0 through the shared
+    # placement subsystem.
     ep_idx = np.nonzero(~dp_primary)[0]
     if algorithm == "lpt-ff":
         t_hat_primary = np.take_along_axis(
@@ -234,55 +243,15 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     else:
         order = ep_idx[np.argsort(deadline[ep_idx], kind="stable")]
 
-    for t_idx in order:
-        t_idx = int(t_idx)
-        d = deadline[t_idx]
-        placed = False
-        for c in order_cls[:, t_idx]:
-            c = int(c)
-            cfg_c = cfgs[c]
-            t_hat = float(cfg_c.t_hat[t_idx])
-
-            if algorithm in ("edl", "edf-wf"):
-                pid = eng.worst_fit(class_id=c)
-                mu = float(eng.mu[pid]) if pid >= 0 else np.inf
-                if pid >= 0 and d - mu >= t_hat - _EPS:
-                    eng.assign(pid, mu, t_hat)
-                    assignments.append(make_assignment(t_idx, pid, mu, cfg_c,
-                                                       class_id=c))
-                    placed = True
-                    break
-                if algorithm == "edl" and pid >= 0:
-                    t_theta = max(theta * t_hat, float(cfg_c.t_min[t_idx]))
-                    window = d - mu
-                    if window >= t_theta - _EPS:
-                        # theta-readjustment: the task shrinks to exactly the
-                        # remaining window; its DVFS setting is batch-solved
-                        # after packing (fill_readjusted).
-                        eng.assign(pid, mu, window)
-                        pending.append((len(assignments), t_idx, window, c))
-                        assignments.append(make_assignment(
-                            t_idx, pid, mu, cfg_c, duration=window,
-                            readjusted=True, class_id=c))
-                        placed = True
-                        break
-            else:
-                pid = eng.best_fit(0.0, d, t_hat, class_id=c) \
-                    if algorithm == "edf-bf" \
-                    else eng.first_fit(0.0, d, t_hat, class_id=c)
-                if pid >= 0:
-                    start = float(eng.mu[pid])
-                    eng.assign(pid, start, t_hat)
-                    assignments.append(make_assignment(t_idx, pid, start,
-                                                       cfg_c, class_id=c))
-                    placed = True
-                    break
-        if not placed:
-            c = int(primary[t_idx])
-            pid = eng.open_pair(class_id=c)
-            eng.assign(pid, 0.0, float(cfgs[c].t_hat[t_idx]))
-            assignments.append(make_assignment(t_idx, pid, 0.0, cfgs[c],
-                                               class_id=c))
+    rule = OFFLINE_RULES[algorithm]
+    pos = np.arange(order.shape[0])
+    if placement == "vector":
+        if rule == "wf":
+            ctx.place_group_vector(order, pos, 0.0)
+        else:
+            ctx.place_group_select(order, pos, 0.0, rule)
+    else:
+        ctx.place_group_scalar(order, pos, 0.0, rule)
 
     # --- Deferred theta-readjustment solves: one batched dispatch per class.
     fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs)
@@ -292,11 +261,13 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     e_idle, e_overhead, n_servers = eng.finalize()
     violations = count_violations(
         assignments, deadline, chosen_feasibility(cfgs, assignments, n))
+    e_bound = bounds.theoretical_bound(task_set, interval=interval,
+                                       classes=mcs).e_bound if bound else 0.0
     return cl.ScheduleResult(
         algorithm=f"{algorithm}{'+dvfs' if use_dvfs else ''}",
         e_run=e_run, e_idle=e_idle, e_overhead=e_overhead,
         n_pairs=eng.n_pairs, n_servers=n_servers, violations=violations,
         assignments=assignments,
         makespan=float(eng.mu.max()) if eng.n_pairs else 0.0,
-        feasible_pairs=eng.feasible_pairs,
+        feasible_pairs=eng.feasible_pairs, e_bound=e_bound,
     )

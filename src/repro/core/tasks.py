@@ -156,6 +156,24 @@ def _draw_n(rng: np.random.Generator, library: DvfsParams, n: int):
     return params, u
 
 
+def generate_offline_n(n_tasks: int, seed: int = 0,
+                       library: DvfsParams | None = None) -> TaskSet:
+    """A count-driven offline batch: exactly ``n_tasks`` tasks drawn the
+    §5.1.3 way (vectorized), every one arriving at ``T = 0``.
+
+    Complements :func:`generate_offline` (which targets a *utilization*)
+    for scale benchmarks that need exactly ``n`` tasks
+    (``benchmarks/offline_scale.py``).
+    """
+    rng = np.random.default_rng(seed)
+    library = library if library is not None else app_library()
+    params, u = _draw_n(rng, library, int(n_tasks))
+    t_star = np.asarray(params.default_time())
+    arrival = np.zeros(int(n_tasks))
+    deadline = arrival + t_star / u
+    return TaskSet(arrival, deadline, params, u)
+
+
 TRACE_PATTERNS = ("uniform", "sparse", "bursty", "diurnal")
 
 
