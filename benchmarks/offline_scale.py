@@ -55,15 +55,21 @@ MIXES: Dict[str, Optional[Tuple[str, ...]]] = {
 def _solves(ts, mcs, time_kernel: bool):
     """Time the Algorithm-1 solve (jnp path, and optionally the Pallas
     kernel path) once for a (batch, mix); the configs feed every
-    algorithm's packing run via ``schedule_offline(cfgs=...)``."""
+    algorithm's packing run via ``schedule_offline(cfgs=...)``.
+
+    ``dedup=False`` keeps the timings honest: they measure the solver
+    itself, not hits on the process-wide solve cache (which
+    ``benchmarks/solver_throughput.py`` measures separately).
+    """
     t0 = time.time()
-    cfgs = scheduling.configure_all(ts, True, mcs)
+    cfgs = scheduling.configure_all(ts, True, mcs, dedup=False)
     t_solve = time.time() - t0
     t_solve_kernel = None
     if time_kernel:
-        scheduling.configure_all(ts, True, mcs, use_kernel=True)  # warm
+        scheduling.configure_all(ts, True, mcs, use_kernel=True,
+                                 dedup=False)  # warm
         t0 = time.time()
-        scheduling.configure_all(ts, True, mcs, use_kernel=True)
+        scheduling.configure_all(ts, True, mcs, use_kernel=True, dedup=False)
         t_solve_kernel = time.time() - t0
     return cfgs, t_solve, t_solve_kernel
 

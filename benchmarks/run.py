@@ -42,6 +42,11 @@ def main(argv=None):
     from benchmarks import scheduler_throughput
     scheduler_throughput.run(verbose=False)
 
+    print("# --- Solver throughput layer (dedup/cache + refined kernel) ---",
+          flush=True)
+    from benchmarks import solver_throughput
+    solver_throughput.run(50000 if args.full else 10000, verbose=False)
+
     print("# --- Online scale (event-driven engine) ---", flush=True)
     from benchmarks import online_scale
     online_scale.run_one(100000 if args.full else 20000, "uniform",

@@ -40,7 +40,8 @@ import numpy as np
 
 from benchmarks.common import record
 from repro.core import cluster as cl
-from repro.core import dvfs, machines, online, scheduling, single_task, tasks
+from repro.core import (dvfs, machines, online, scheduling, single_task,
+                        solver_cache, tasks)
 
 #: interval setting -> (ScalingInterval, app-library static-share range,
 #: paper anchor for the mean single-task saving)
@@ -90,6 +91,11 @@ def run(groups: int = 1, utils=(0.2, 0.4), rhos=(1, 2),
         "offline": [],
         "online": [],
     }
+    # The rho x Delta (and seed-group) cells of one (interval, mix) re-solve
+    # identical (params, allowed) rows; the process-wide solve cache serves
+    # them after the first cell.  Reset stats so the hit-rate below is this
+    # sweep's own cross-cell reuse.
+    solver_cache.GLOBAL_CACHE.reset_stats()
 
     for iv_name in intervals:
         interval, p0_frac, paper_anchor = INTERVAL_SETTINGS[iv_name]
@@ -162,6 +168,14 @@ def run(groups: int = 1, utils=(0.2, 0.4), rhos=(1, 2),
         a = report["anchors"][iv_name]
         record(f"scenario/{iv_name}_anchor", 0.0,
                f"{a['single_task_saving']:.4f} (paper ~{a['paper']})")
+    stats = solver_cache.GLOBAL_CACHE.stats()
+    report["meta"]["solve_cache"] = stats
+    record("scenario/solve_cache", 0.0,
+           f"hit_rate {stats['hit_rate']:.3f} ({stats['hits']} hits / "
+           f"{stats['misses']} misses)")
+    if verbose:
+        print(f"solve-cache cross-cell reuse: {stats['hit_rate']:.1%} "
+              f"({stats['hits']} hits, {stats['misses']} misses)")
     return report
 
 
@@ -181,6 +195,10 @@ def to_markdown(report: Dict) -> str:
         "| interval | mean saving | paper |",
         "|---|---|---|",
     ]
+    if "solve_cache" in m:
+        s = m["solve_cache"]
+        lines[4:4] = [f"Solve-cache cross-cell reuse: {s['hit_rate']:.1%} "
+                      f"({s['hits']} hits / {s['misses']} misses).", ""]
     for iv, a in report["anchors"].items():
         lines.append(f"| {iv} | {a['single_task_saving']:.1%} "
                      f"| ~{a['paper']:.1%} |")

@@ -1,0 +1,311 @@
+"""The solver throughput layer end to end: rows/second through Algorithm 1
+across {dense-unique, trace-duplicated} workloads x {kernel, jnp} solver
+paths x {dedup on, off}, plus the kernel's refinement accuracy/time trade.
+
+Two workload shapes bracket reality:
+
+* **dense-unique** — ``tasks.generate_offline_n`` draws a continuous
+  utilization per task, so every ``(params, allowed)`` row is unique: the
+  dedup layer's worst case (pure overhead; the benchmark reports how
+  small).
+* **trace-duplicated** — a small base of unique tasks tiled into a long
+  trace (recurring jobs, the paper's small-app-library setting): the dedup
+  layer's home turf.  With a 2-class mix every task is solved once per
+  class, so a 50k-task trace is a 100k-row solver workload.
+
+For each cell the harness measures the direct solver (``dedup=False``),
+the dedup layer on a **cold** cache (unique rows still hit the solver) and
+on a **warm** cache (every row served from the process-wide LRU), and
+asserts the dedup outputs are **bit-identical** to the direct path.
+
+The refinement section rechecks the tentpole claim on the golden task set:
+the hierarchical ``(64, 64)`` grid must beat the legacy flat-128-point
+sweep (``grid=(128, 2)`` — same coarse resolution, degenerate refinement)
+on max relative error vs the jnp oracle at equal-or-lower kernel time.
+
+``--smoke`` is the CI guard (budget + dedup >= 2x on the duplicated trace
++ bit-equality + refinement wins); it also writes the JSON summary to
+``BENCH_solver.json`` at the repo root so the perf trajectory is tracked
+across PRs.
+
+    PYTHONPATH=src python -m benchmarks.solver_throughput --smoke
+    PYTHONPATH=src python -m benchmarks.solver_throughput \\
+        --out results/solver_throughput
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import dvfs, machines, solver_cache, tasks
+from repro.core.scheduling import configure_all
+
+#: class mix for the multi-class workloads: every task solved on both the
+#: reference 1080Ti box and the v5e box in one stacked dispatch.
+MIX = ("gtx-1080ti", "tpu-v5e")
+
+#: unique base tasks behind the trace-duplicated workload (recurring jobs).
+BASE_UNIQUE = 512
+
+
+def _workload(kind: str, n_tasks: int, seed: int = 0):
+    """A TaskSet of exactly ``n_tasks`` tasks: all-unique rows
+    (``dense-unique``) or ``BASE_UNIQUE`` tasks tiled (``trace-duplicated``)."""
+    lib = tasks.app_library()
+    if kind == "dense-unique":
+        return tasks.generate_offline_n(n_tasks, seed=seed, library=lib)
+    base = tasks.generate_offline_n(min(BASE_UNIQUE, n_tasks), seed=seed,
+                                    library=lib)
+    reps = -(-n_tasks // len(base))
+    return base.subset(np.tile(np.arange(len(base)), reps)[:n_tasks])
+
+
+def _configs_equal(a, b) -> bool:
+    """Bitwise TaskConfig equality across a per-class config list."""
+    for ca, cb in zip(a, b):
+        for fa, fb in zip(ca, cb):
+            if isinstance(fa, int):
+                if fa != fb:
+                    return False
+            elif not np.array_equal(np.asarray(fa), np.asarray(fb)):
+                return False
+    return True
+
+
+def bench_cell(kind: str, use_kernel: bool, n_tasks: int,
+               seed: int = 0, verbose: bool = True) -> Dict:
+    """One (workload, solver-path) cell: direct vs dedup-cold vs dedup-warm
+    rows/sec, with bit-equality asserted between all three."""
+    ts = _workload(kind, n_tasks, seed)
+    mcs = machines.resolve_classes(MIX)
+    rows = len(ts) * len(mcs)
+    path = "kernel" if use_kernel else "jnp"
+
+    def run(dedup: bool):
+        return configure_all(ts, True, mcs, use_kernel=use_kernel,
+                             dedup=dedup)
+
+    run(dedup=False)                       # compile warm-up, both paths
+    run(dedup=True)
+    t0 = time.time()
+    ref = run(dedup=False)
+    t_direct = time.time() - t0
+
+    solver_cache.GLOBAL_CACHE.clear()      # cold: unique rows hit the solver
+    solver_cache.GLOBAL_CACHE.reset_stats()
+    t0 = time.time()
+    cold = run(dedup=True)
+    t_cold = time.time() - t0
+    cold_stats = solver_cache.GLOBAL_CACHE.stats()
+
+    t0 = time.time()                       # warm: every row is a cache hit
+    warm = run(dedup=True)
+    t_warm = time.time() - t0
+
+    assert _configs_equal(ref, cold), (kind, path, "cold dedup diverged")
+    assert _configs_equal(ref, warm), (kind, path, "warm dedup diverged")
+
+    out = {
+        "workload": kind, "path": path, "n_tasks": len(ts),
+        "rows": rows, "unique_rows": cold_stats["misses"],
+        "direct_s": t_direct, "direct_rows_per_s": rows / t_direct,
+        "dedup_cold_s": t_cold, "dedup_cold_rows_per_s": rows / t_cold,
+        "dedup_warm_s": t_warm, "dedup_warm_rows_per_s": rows / t_warm,
+        "speedup_cold": t_direct / t_cold,
+        "speedup_warm": t_direct / t_warm,
+        "bit_identical": True,
+    }
+    if verbose:
+        print(f"{kind:16s} {path:6s} rows={rows:7d} "
+              f"uniq={out['unique_rows']:6d} direct={t_direct:6.2f}s "
+              f"cold={t_cold:6.2f}s ({out['speedup_cold']:5.1f}x) "
+              f"warm={t_warm:6.2f}s ({out['speedup_warm']:5.1f}x)",
+              flush=True)
+    record(f"solver_throughput/{kind}_{path}", t_direct / rows * 1e6,
+           f"{rows / t_direct:.0f} rows/s direct, "
+           f"{out['speedup_cold']:.1f}x dedup-cold, "
+           f"{out['speedup_warm']:.1f}x dedup-warm")
+    return out
+
+
+def bench_refinement(seed: int = 9, verbose: bool = True) -> Dict:
+    """Hierarchical (64, 64) grid vs the legacy flat-128 sweep on the golden
+    task set: max rel energy error vs the jnp oracle, and kernel time."""
+    from repro.kernels import ops, ref
+
+    lib = tasks.generate_offline(0.08, seed=seed)
+    allowed = np.asarray(lib.deadline - lib.arrival)
+    tasks_mat = np.stack(
+        [np.asarray(f, np.float32) for f in lib.params.astuple()]
+        + [np.asarray(allowed, np.float32), np.zeros(len(lib), np.float32)],
+        axis=1)
+    expect = ref.dvfs_solve_ref(tasks_mat)
+    keys = solver_cache.build_keys(
+        lib.params.astuple(), allowed, False,
+        np.asarray(dvfs.WIDE.bounds(), np.float32))
+
+    out: Dict = {"n_golden": len(lib)}
+    for label, grid in (("flat128", (128, 2)), ("hier64x64", (64, 64))):
+        ops.dvfs_solve_matrix(keys, grid=grid)  # compile warm-up
+        t0 = time.time()
+        for _ in range(5):
+            sol = ops.dvfs_solve_matrix(keys, grid=grid)
+        t_k = (time.time() - t0) / 5
+        rel = float(np.max(np.abs(sol[:, 5] - expect[:, 5]) / expect[:, 5]))
+        out[f"{label}_max_rel_err"] = rel
+        out[f"{label}_kernel_s"] = t_k
+        if verbose:
+            print(f"refinement {label:10s} grid={grid}: "
+                  f"max_rel_err={rel:.2e} kernel={t_k * 1e3:.1f}ms",
+                  flush=True)
+    out["err_improvement"] = (out["flat128_max_rel_err"]
+                              / max(out["hier64x64_max_rel_err"], 1e-300))
+    record("solver_throughput/refinement",
+           out["hier64x64_kernel_s"] * 1e6,
+           f"err {out['hier64x64_max_rel_err']:.1e} vs flat128 "
+           f"{out['flat128_max_rel_err']:.1e} "
+           f"({out['err_improvement']:.0f}x tighter)")
+    return out
+
+
+def _write_report(rows: List[Dict], refinement: Dict, out_prefix: str):
+    os.makedirs(os.path.dirname(out_prefix) or ".", exist_ok=True)
+    payload = {"cells": rows, "refinement": refinement}
+    with open(out_prefix + ".json", "w") as f:
+        json.dump(payload, f, indent=2)
+    cols = ("workload", "path", "rows", "unique_rows", "direct_rows_per_s",
+            "dedup_cold_rows_per_s", "dedup_warm_rows_per_s", "speedup_cold",
+            "speedup_warm", "bit_identical")
+    lines = ["# Solver throughput layer",
+             "",
+             "rows = tasks x classes through Algorithm 1; `dedup` = the "
+             "unique-row dedup + LRU solve cache (`core/solver_cache.py`), "
+             "cold (empty cache) and warm (all rows cached).  Outputs are "
+             "bit-identical across all columns.",
+             "",
+             "| " + " | ".join(cols) + " |",
+             "|" + "---|" * len(cols)]
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c)
+            cells.append(f"{v:.4g}" if isinstance(v, float) else str(v))
+        lines.append("| " + " | ".join(cells) + " |")
+    lines += ["",
+              f"Refinement (golden set, n={refinement['n_golden']}): "
+              f"hier (64,64) max rel err "
+              f"{refinement['hier64x64_max_rel_err']:.2e} in "
+              f"{refinement['hier64x64_kernel_s'] * 1e3:.1f} ms vs flat-128 "
+              f"{refinement['flat128_max_rel_err']:.2e} in "
+              f"{refinement['flat128_kernel_s'] * 1e3:.1f} ms "
+              f"({refinement['err_improvement']:.0f}x tighter)."]
+    with open(out_prefix + ".md", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {out_prefix}.json and {out_prefix}.md", flush=True)
+
+
+def _write_summary(rows: List[Dict], refinement: Dict, path: str):
+    """The cross-PR tracking file (BENCH_solver.json)."""
+    dup_kernel = next((r for r in rows
+                       if r["workload"] == "trace-duplicated"
+                       and r["path"] == "kernel"), None)
+    summary = {
+        "benchmark": "solver_throughput",
+        "cells": rows,
+        "refinement": refinement,
+        "headline": {
+            "duplicated_kernel_rows_per_s_direct":
+                dup_kernel and dup_kernel["direct_rows_per_s"],
+            "duplicated_kernel_speedup_cold":
+                dup_kernel and dup_kernel["speedup_cold"],
+            "duplicated_kernel_speedup_warm":
+                dup_kernel and dup_kernel["speedup_warm"],
+            "hier_max_rel_err": refinement["hier64x64_max_rel_err"],
+            "flat128_max_rel_err": refinement["flat128_max_rel_err"],
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"wrote {path}", flush=True)
+
+
+def smoke(n_tasks: int, budget: float, min_speedup: float,
+          summary: Optional[str]) -> Dict:
+    """CI tripwire: on the trace-duplicated ``n_tasks`` x 2-class workload
+    the dedup layer must beat the direct kernel path >= ``min_speedup``
+    (cold cache) inside ``budget`` seconds, bit-identically; and the
+    hierarchical kernel must beat the flat-128 grid on accuracy at
+    equal-or-lower time."""
+    t0 = time.time()
+    cell = bench_cell("trace-duplicated", use_kernel=True, n_tasks=n_tasks)
+    refinement = bench_refinement()
+    wall = time.time() - t0
+    assert cell["bit_identical"]
+    assert cell["speedup_cold"] >= min_speedup, (
+        f"dedup speedup regressed: {cell['speedup_cold']:.2f}x < "
+        f"{min_speedup:.1f}x on the duplicated trace (cold cache)")
+    assert wall <= budget, f"smoke took {wall:.1f}s (> {budget:.0f}s budget)"
+    assert (refinement["hier64x64_max_rel_err"]
+            < refinement["flat128_max_rel_err"]), refinement
+    assert (refinement["hier64x64_kernel_s"]
+            <= refinement["flat128_kernel_s"] * 1.10), (
+        "refined kernel slower than the flat-128 sweep: "
+        f"{refinement['hier64x64_kernel_s']:.3f}s vs "
+        f"{refinement['flat128_kernel_s']:.3f}s")
+    print(f"smoke OK: {cell['speedup_cold']:.1f}x >= {min_speedup:.1f}x "
+          f"(warm {cell['speedup_warm']:.1f}x), wall {wall:.1f}s <= "
+          f"{budget:.0f}s, err {refinement['hier64x64_max_rel_err']:.1e} < "
+          f"{refinement['flat128_max_rel_err']:.1e}", flush=True)
+    if summary:
+        _write_summary([cell], refinement, summary)
+    return cell
+
+
+def run(n_tasks: int = 50000, out: Optional[str] = None,
+        summary: Optional[str] = None, verbose: bool = True) -> List[Dict]:
+    rows = [bench_cell(kind, uk, n_tasks, verbose=verbose)
+            for kind in ("dense-unique", "trace-duplicated")
+            for uk in (True, False)]
+    refinement = bench_refinement(verbose=verbose)
+    if out:
+        _write_report(rows, refinement, out)
+    if summary:
+        _write_summary(rows, refinement, summary)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--tasks", type=int, default=50000,
+                    help="tasks per workload (x2 classes = solver rows)")
+    ap.add_argument("--out", default="results/solver_throughput",
+                    help="JSON/markdown report path prefix")
+    ap.add_argument("--summary", default=None,
+                    help="also write the cross-PR summary JSON here "
+                         "(CI uses BENCH_solver.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: budget + dedup speedup + bit-equality "
+                         "+ refinement accuracy")
+    ap.add_argument("--budget", type=float, default=300.0,
+                    help="--smoke wall-clock cap (s)")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="--smoke minimum cold-cache dedup speedup on the "
+                         "duplicated trace")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        smoke(args.tasks, args.budget, args.min_speedup,
+              args.summary or "BENCH_solver.json")
+        return
+    run(args.tasks, out=args.out, summary=args.summary)
+
+
+if __name__ == "__main__":
+    main()

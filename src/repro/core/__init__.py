@@ -30,18 +30,25 @@ Architecture (top to bottom)::
     DVFS solvers        single_task.configure_tasks / readjust_batch
                         (Algorithm 1; batched, padded to pow-2 shapes)
         |
+    solve dedup/cache   solver_cache.solve_rows - unique-row dedup + the
+                        process-wide LRU solve cache (bit-transparent;
+                        dedup=True default on every solver entry point);
+                        kernels/ops.dvfs_solve_matrix shards miss batches
+                        across local devices
+        |
     Pallas kernel       kernels/dvfs_opt.dvfs_solve_kernel - the use_kernel
                         fast path: one [n, 16] task matrix per dispatch
                         (per-row interval bounds -> all classes in one call),
-                        grid sweeps in VMEM (incl. the theta-readjustment
-                        case)
+                        hierarchical G0 -> G1 frequency sweeps in VMEM
+                        (incl. the theta-readjustment case)
 
 See docs/ARCHITECTURE.md for the full picture and docs/EQUATIONS.md for the
 equation/algorithm -> code map.
 """
 
 from repro.core import (bounds, cluster, dvfs, engine, jobs, machines,
-                        online, placement, scheduling, single_task, tasks)
+                        online, placement, scheduling, single_task,
+                        solver_cache, tasks)
 from repro.core.bounds import theoretical_bound
 from repro.core.dvfs import DvfsParams, ScalingInterval, NARROW, WIDE
 from repro.core.engine import ClusterEngine
@@ -58,5 +65,5 @@ __all__ = [
     "configure_tasks", "solve_unconstrained", "solve_with_deadline",
     "schedule_offline", "schedule_online", "theoretical_bound",
     "bounds", "cluster", "dvfs", "engine", "jobs", "machines", "online",
-    "placement", "scheduling", "single_task", "tasks",
+    "placement", "scheduling", "single_task", "solver_cache", "tasks",
 ]

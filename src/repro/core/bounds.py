@@ -63,22 +63,45 @@ class EnergyBound:
 
 
 def unconstrained_energies(params, classes, interval: ScalingInterval,
-                           n: int) -> np.ndarray:
+                           n: int, dedup: bool = True) -> np.ndarray:
     """Per-task unconstrained-optimum energy on each class, shape ``[C, n]``
     (``params`` may be pow-2 padded past ``n``; one jitted batched solve
-    per class)."""
+    per class).
+
+    ``dedup=True`` (default) keys each row as ``(params, allowed=+inf)`` in
+    the process-wide solve cache, so re-evaluating the bound across sweep
+    cells (every scenario knob calls :func:`theoretical_bound` on the same
+    task set) never re-solves a row.
+    """
+    from repro.core import solver_cache
+
     out = np.empty((len(classes), n))
     for k, mc in enumerate(classes):
-        sol = single_task.solve_unconstrained(mc.adapt(params),
-                                              mc.effective_interval(interval))
-        out[k] = np.asarray(sol.energy, np.float64)[:n]
+        adapted = mc.adapt(params)
+        iv = mc.effective_interval(interval)
+        if dedup:
+            n_rows = np.shape(np.asarray(adapted.p0))[0]
+            keys = solver_cache.build_keys(
+                adapted.astuple(), np.full(n_rows, np.inf, np.float32),
+                False, np.asarray(iv.bounds(), np.float32))
+
+            def solve(km: np.ndarray, _iv=iv) -> np.ndarray:
+                p = dvfs.DvfsParams(*(km[:, i] for i in range(6)))
+                return solver_cache.solution_to_rows(
+                    single_task.solve_unconstrained(p, _iv))
+
+            rows = solver_cache.solve_rows(keys, solve, tag="jnp-unc")
+            out[k] = np.asarray(rows[:, 5], np.float64)[:n]
+        else:
+            sol = single_task.solve_unconstrained(adapted, iv)
+            out[k] = np.asarray(sol.energy, np.float64)[:n]
     return out
 
 
 def theoretical_bound(task_set, interval: ScalingInterval = dvfs.WIDE,
                       classes=None, p_idle: float = cl.P_IDLE,
                       delta_on: float = cl.DELTA_ON, l: int = 1,
-                      rho: int = 0) -> EnergyBound:
+                      rho: int = 0, dedup: bool = True) -> EnergyBound:
     """The paper's §5 analytical bound for a task set.
 
     ``classes`` is any class-mix spec (``None`` = the homogeneous reference
@@ -94,8 +117,9 @@ def theoretical_bound(task_set, interval: ScalingInterval = dvfs.WIDE,
     if n == 0:
         return EnergyBound(0.0, 0.0, 0.0, e_baseline)
     params, _, _, _ = single_task.pad_pow2(task_set.params, np.zeros(n))
-    e_run = float(np.min(unconstrained_energies(params, mcs, interval, n),
-                         axis=0).sum())
+    e_run = float(np.min(
+        unconstrained_energies(params, mcs, interval, n, dedup=dedup),
+        axis=0).sum())
     if rho > 0:
         e_idle = min(mc.p_idle for mc in mcs) * rho * l
         e_overhead = min(mc.delta_on for mc in mcs) * l

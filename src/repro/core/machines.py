@@ -189,19 +189,23 @@ def resolve_classes(classes, p_idle: float = cl.P_IDLE,
 def configure_classes(params: DvfsParams, allowed: np.ndarray,
                       classes: Sequence[MachineClass],
                       interval: ScalingInterval = dvfs.WIDE,
-                      use_kernel: bool = False) -> List[TaskConfig]:
+                      use_kernel: bool = False,
+                      dedup: bool = True) -> List[TaskConfig]:
     """Algorithm 1 for every task on every class: ``C`` TaskConfigs of ``n``.
 
     ``use_kernel=True`` fuses all ``C x n`` solves into ONE widened Pallas
     dispatch — the class blocks are stacked into a ``[C*n, 16]`` task matrix
     whose rows carry their class's interval bounds.  The jnp path runs one
     batched ``configure_tasks`` per class (each interval compiles once).
+    ``dedup=True`` (default) routes either path through the unique-row
+    dedup + process-wide solve cache (bit-identical; see
+    :mod:`repro.core.solver_cache`).
     """
     allowed = np.asarray(allowed, dtype=np.float64)
     if not use_kernel:
         return [single_task.configure_tasks(
                     mc.adapt(params), allowed, mc.effective_interval(interval),
-                    use_kernel=False)
+                    use_kernel=False, dedup=dedup)
                 for mc in classes]
 
     from repro.kernels import ops as kernel_ops
@@ -219,7 +223,7 @@ def configure_classes(params: DvfsParams, allowed: np.ndarray,
     big, allowed_rep, interval_rows, _ = single_task.pad_pow2(
         big, allowed_rep, interval_rows)
     sol = kernel_ops.dvfs_solve(big, allowed_rep, interval,
-                                interval_rows=interval_rows)
+                                interval_rows=interval_rows, dedup=dedup)
     cfgs: List[TaskConfig] = []
     for c, (a, iv) in enumerate(zip(adapted, ivs)):
         sol_c = type(sol)(*(np.asarray(f)[c * n: (c + 1) * n] for f in sol))
@@ -253,7 +257,8 @@ def class_order(cfgs: Sequence[TaskConfig]) -> np.ndarray:
 
 def readjust_classes(params: DvfsParams, rows: np.ndarray, windows: np.ndarray,
                      class_ids: np.ndarray, classes: Sequence[MachineClass],
-                     interval: ScalingInterval, use_kernel: bool):
+                     interval: ScalingInterval, use_kernel: bool,
+                     dedup: bool = True):
     """Batched θ-readjustment across classes: one deadline-boundary dispatch
     per class present in ``class_ids`` (≤ C dispatches per run).
 
@@ -267,7 +272,7 @@ def readjust_classes(params: DvfsParams, rows: np.ndarray, windows: np.ndarray,
         sub = mc.adapt(params[rows[m]])
         out = single_task.readjust_batch(sub, windows[m],
                                          mc.effective_interval(interval),
-                                         use_kernel=use_kernel)
+                                         use_kernel=use_kernel, dedup=dedup)
         for dst, src in zip((v, fc, fm, t, p, e), out):
             dst[m] = src
     return v, fc, fm, t, p, e

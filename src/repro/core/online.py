@@ -100,7 +100,8 @@ def _slot_groups(task_set: TaskSet):
 
 def online_configs(task_set: TaskSet, mcs, use_dvfs: bool = True,
                    interval: ScalingInterval = dvfs.WIDE,
-                   use_kernel: bool = False) -> List[TaskConfig]:
+                   use_kernel: bool = False,
+                   dedup: bool = True) -> List[TaskConfig]:
     """Algorithm 1 (Alg 5, lines 1-4) for the WHOLE horizon and EVERY class
     in one batch: the per-task window ``d - ceil(a)`` is fixed by the
     arrival slot, so nothing forces a per-slot solve.  With
@@ -112,7 +113,8 @@ def online_configs(task_set: TaskSet, mcs, use_dvfs: bool = True,
     allowed = deadline - arrival_slots(task_set)
     if use_dvfs:
         return machines.configure_classes(task_set.params, allowed, mcs,
-                                          interval, use_kernel=use_kernel)
+                                          interval, use_kernel=use_kernel,
+                                          dedup=dedup)
     return machines.default_configs(task_set, mcs, allowed=allowed)
 
 
@@ -124,7 +126,8 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                     use_kernel: bool = False,
                     classes=None, placement: str = "vector",
                     cfgs: Optional[List[TaskConfig]] = None,
-                    bound: bool = True) -> cl.ScheduleResult:
+                    bound: bool = True,
+                    dedup: bool = True) -> cl.ScheduleResult:
     """Run the online simulation end to end (Algorithms 4-6).
 
     ``algorithm`` is ``"edl"`` (Algorithm 5, SPT + theta-readjustment) or
@@ -137,7 +140,9 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     schedules.  ``cfgs`` injects precomputed :func:`online_configs` output
     (must match ``task_set``/``classes``/``use_dvfs``/``interval``).
     ``bound=False`` skips the ``e_bound`` solve (benchmarks timing the
-    simulation hot path).
+    simulation hot path).  ``dedup=False`` opts every DVFS solve out of the
+    unique-row dedup + solve cache (the default routes them through it,
+    bit-identically).
     """
     algorithm = algorithm.lower()
     if algorithm not in ("edl", "bin"):
@@ -151,7 +156,8 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
 
     if cfgs is None:
         cfgs = online_configs(task_set, mcs, use_dvfs=use_dvfs,
-                              interval=interval, use_kernel=use_kernel)
+                              interval=interval, use_kernel=use_kernel,
+                              dedup=dedup)
     order_cls = machines.class_order(cfgs)          # [C, n]
 
     eng = ClusterEngine(l, servers=True, rho=rho, classes=mcs)
@@ -183,7 +189,8 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                                    "wf" if algorithm == "edl" else "ff")
 
     # Deferred theta-readjustment solves: one batched dispatch per class.
-    fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs)
+    fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs,
+                    dedup=dedup)
 
     e_idle, e_overhead, n_servers = eng.finalize()
     e_run = float(sum(a.energy for a in assignments))
@@ -192,7 +199,7 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     mk = max((a.finish for a in assignments), default=0.0)
     e_bound = bounds.theoretical_bound(
         task_set, interval=interval, classes=mcs, l=l,
-        rho=rho).e_bound if bound else 0.0
+        rho=rho, dedup=dedup).e_bound if bound else 0.0
     return cl.ScheduleResult(
         algorithm=f"online-{algorithm}{'+dvfs' if use_dvfs else ''}",
         e_run=e_run, e_idle=e_idle, e_overhead=e_overhead,

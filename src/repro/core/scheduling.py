@@ -80,31 +80,33 @@ def default_config(task_set: TaskSet) -> TaskConfig:
 
 def configure(task_set: TaskSet, use_dvfs: bool,
               interval: ScalingInterval = dvfs.WIDE,
-              use_kernel: bool = False) -> TaskConfig:
+              use_kernel: bool = False, dedup: bool = True) -> TaskConfig:
     """Algorithm 1 over a task set (or the no-DVFS default configuration)."""
     if not use_dvfs:
         return default_config(task_set)
     allowed = task_set.deadline - task_set.arrival
     return single_task.configure_tasks(task_set.params, allowed, interval,
-                                       use_kernel=use_kernel)
+                                       use_kernel=use_kernel, dedup=dedup)
 
 
 def configure_all(task_set: TaskSet, use_dvfs: bool,
                   mcs: Sequence[MachineClass],
                   interval: ScalingInterval = dvfs.WIDE,
-                  use_kernel: bool = False) -> List[TaskConfig]:
+                  use_kernel: bool = False, dedup: bool = True) -> List[TaskConfig]:
     """Algorithm 1 on every class (offline windows ``d - a``)."""
     if not use_dvfs:
         return machines.default_configs(task_set, mcs)
     allowed = task_set.deadline - task_set.arrival
     return machines.configure_classes(task_set.params, allowed, mcs,
-                                      interval, use_kernel=use_kernel)
+                                      interval, use_kernel=use_kernel,
+                                      dedup=dedup)
 
 
 def fill_readjusted(assignments: List[cl.Assignment],
                     pending: List[PendingRow],
                     task_set: TaskSet, interval: ScalingInterval,
-                    use_kernel: bool, mcs: Sequence[MachineClass]):
+                    use_kernel: bool, mcs: Sequence[MachineClass],
+                    dedup: bool = True):
     """Solve every deferred theta-readjustment in one batched dispatch per
     class present and write the DVFS settings/energies back into the
     assignment list.
@@ -121,7 +123,8 @@ def fill_readjusted(assignments: List[cl.Assignment],
     windows = np.asarray([w for _, _, w, _ in pending], dtype=np.float64)
     cids = np.asarray([c for _, _, _, c in pending], dtype=np.int64)
     v, fc, fm, t, p, e = machines.readjust_classes(
-        task_set.params, rows, windows, cids, mcs, interval, use_kernel)
+        task_set.params, rows, windows, cids, mcs, interval, use_kernel,
+        dedup=dedup)
     for k, (ai, _, _, _) in enumerate(pending):
         a = assignments[ai]
         assignments[ai] = dataclasses.replace(
@@ -170,7 +173,8 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                      use_kernel: bool = False,
                      classes=None, placement: str = "vector",
                      cfgs: Optional[List[TaskConfig]] = None,
-                     bound: bool = True) -> cl.ScheduleResult:
+                     bound: bool = True,
+                     dedup: bool = True) -> cl.ScheduleResult:
     """Run one offline scheduling algorithm end to end (Algorithms 1+2+3).
 
     ``classes`` selects the machine-class mix: ``None`` is the homogeneous
@@ -184,6 +188,8 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     (``"vector"``, default) or the per-task reference loop (``"scalar"``);
     both produce bit-identical schedules.  ``bound=False`` skips the
     ``e_bound`` solve (benchmarks timing the packing hot path).
+    ``dedup=False`` opts every DVFS solve out of the unique-row dedup +
+    solve cache (the default routes them through it, bit-identically).
     """
     algorithm = algorithm.lower()
     if algorithm not in OFFLINE_RULES:
@@ -197,7 +203,7 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
         cfgs = [cfg]
     elif cfgs is None:
         cfgs = configure_all(task_set, use_dvfs, mcs, interval,
-                             use_kernel=use_kernel)
+                             use_kernel=use_kernel, dedup=dedup)
     elif len(cfgs) != len(mcs):
         raise ValueError("cfgs= needs one TaskConfig per machine class")
 
@@ -254,15 +260,17 @@ def schedule_offline(task_set: TaskSet, l: int = 1, theta: float = 1.0,
         ctx.place_group_scalar(order, pos, 0.0, rule)
 
     # --- Deferred theta-readjustment solves: one batched dispatch per class.
-    fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs)
+    fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs,
+                    dedup=dedup)
 
     # --- Phase 3: Algorithm 3 server grouping + Eq. (6) energies per class.
     e_run = float(sum(a.energy for a in assignments))
     e_idle, e_overhead, n_servers = eng.finalize()
     violations = count_violations(
         assignments, deadline, chosen_feasibility(cfgs, assignments, n))
-    e_bound = bounds.theoretical_bound(task_set, interval=interval,
-                                       classes=mcs).e_bound if bound else 0.0
+    e_bound = bounds.theoretical_bound(
+        task_set, interval=interval, classes=mcs,
+        dedup=dedup).e_bound if bound else 0.0
     return cl.ScheduleResult(
         algorithm=f"{algorithm}{'+dvfs' if use_dvfs else ''}",
         e_run=e_run, e_idle=e_idle, e_overhead=e_overhead,

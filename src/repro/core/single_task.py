@@ -314,18 +314,50 @@ def no_dvfs_config(params: DvfsParams, allowed) -> TaskConfig:
     )
 
 
+def _dedup_solve(params: DvfsParams, allowed, interval: ScalingInterval,
+                 boundary: bool) -> DvfsSolution:
+    """Route a batched jnp solve through the unique-row dedup + process-wide
+    LRU cache (:mod:`repro.core.solver_cache`).
+
+    Bit-identical to the direct solve: the f32 key matrix IS the solver
+    input (both solvers cast to f32 before computing) and every solver is
+    row-independent, so deduped rows scatter back to exactly the values a
+    full-batch solve would produce.
+    """
+    from repro.core import solver_cache
+
+    keys = solver_cache.build_keys(
+        params.astuple(), allowed, boundary,
+        np.asarray(interval.bounds(), np.float32))
+    solver = solve_on_boundary if boundary else solve_with_deadline
+
+    def solve(km: np.ndarray) -> np.ndarray:
+        p = DvfsParams(*(km[:, i] for i in range(6)))
+        return solver_cache.solution_to_rows(solver(p, km[:, 6], interval))
+
+    rows = solver_cache.solve_rows(keys, solve,
+                                   tag="jnp-bd" if boundary else "jnp-dl")
+    return solver_cache.rows_to_solution(rows)
+
+
 def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvfs.WIDE,
-                    use_kernel: bool = False) -> TaskConfig:
+                    use_kernel: bool = False, dedup: bool = True) -> TaskConfig:
     """Algorithm 1: per-task optimal DVFS settings for a whole task set.
 
     ``allowed`` is ``d - a`` per task.  With ``use_kernel=True`` the batched
     Pallas kernel (interpret mode on CPU) computes the whole solve.
+    ``dedup=True`` (default) solves only unique ``(params, allowed)`` rows
+    and serves repeats — within this call or from any previous one — out of
+    the process-wide solve cache, bit-identically.
     """
     params, allowed, _, n = pad_pow2(params, allowed)
     if use_kernel:
         from repro.kernels import ops as kernel_ops
 
-        sol = kernel_ops.dvfs_solve(params, np.asarray(allowed), interval)
+        sol = kernel_ops.dvfs_solve(params, np.asarray(allowed), interval,
+                                    dedup=dedup)
+    elif dedup:
+        sol = _dedup_solve(params, allowed, interval, boundary=False)
     else:
         sol = solve_with_deadline(params, allowed, interval)
     if np.shape(np.asarray(params.p0))[0] != n:
@@ -336,7 +368,7 @@ def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvf
 
 
 def readjust_batch(params: DvfsParams, windows, interval: ScalingInterval = dvfs.WIDE,
-                   use_kernel: bool = False):
+                   use_kernel: bool = False, dedup: bool = True):
     """Batched theta-readjustment: re-solve ``n`` tasks with shrunken time
     budgets in ONE solver dispatch (Algorithm 2 lines 16-19 / Algorithm 5).
 
@@ -353,7 +385,9 @@ def readjust_batch(params: DvfsParams, windows, interval: ScalingInterval = dvfs
         from repro.kernels import ops as kernel_ops
 
         sol = kernel_ops.dvfs_solve(params, np.asarray(padded), interval,
-                                    readjust=True)
+                                    readjust=True, dedup=dedup)
+    elif dedup:
+        sol = _dedup_solve(params, padded, interval, boundary=True)
     else:
         sol = solve_on_boundary(params, padded, interval)
     v, fc, fm, t, p = (np.asarray(f, np.float64)[:n]

@@ -7,8 +7,11 @@
 
 ``ops`` holds the jit'd public wrappers (interpret=True on CPU); ``ref``
 holds the pure-jnp oracles used by tests/test_kernels.py.
+``default_interpret`` is the one interpret-mode policy every kernel call
+site shares (CPU containers interpret, TPU hosts compile).
 """
 
 from repro.kernels import ops, ref
+from repro.kernels.ops import default_interpret
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "default_interpret"]

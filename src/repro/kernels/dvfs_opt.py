@@ -4,14 +4,15 @@ This is the scheduler's own hot-spot Φ: at every online time slot the
 cluster solves ``argmin E(V, fc, fm)`` for every newly-arrived task
 (Algorithm 1/5) — thousands of independent 2-variable minimizations, and
 with heterogeneous machine classes one such solve per task **per class**.
-The kernel evaluates the energy surface for a block of tasks over a dense
-frequency grid entirely in VMEM and reduces the argmin, fusing what would
-otherwise be a dozen HBM round-trips per task into one.
+The kernel evaluates the energy surface for a block of tasks over a
+hierarchically refined frequency grid entirely in VMEM and reduces the
+argmin, fusing what would otherwise be a dozen HBM round-trips per task
+into one.
 
 Layout: tasks are a [n, 16] f32 matrix
     (p0, γ, c, D, δ, t0, allowed, readjust,
      v_min, v_max, fc_min, fm_min, fm_max, pad, pad, pad);
-block = (BT=128 tasks, G=128 grid points) — an (8,128)-aligned VPU tile.
+block = BT=128 tasks per VPU tile row.
 Columns 8-12 carry the row's own :class:`ScalingInterval` bounds, which is
 what lets one ``pallas_call`` solve a class-stacked ``[C*n, 16]`` matrix
 where every class block has a different DVFS box (see
@@ -19,7 +20,18 @@ where every class block has a different DVFS box (see
 (homogeneous interval) is widened on entry from the static ``interval``
 argument.
 
-Two grid sweeps per task block, matching the paper's case split:
+Each of the two 1-D sweeps is **hierarchical** (``grid=(G0, G1)`` static
+args, default ``(64, 64)``): a coarse pass over ``G0`` equispaced points
+brackets the argmin, then a fine pass re-sweeps ``G1`` points inside the
+``±1``-coarse-step bracket — ~``G0·G1/2`` effective resolution for
+``G0+G1`` evaluations, i.e. the same evaluation budget as the old flat
+128-point sweep but ~16x the resolution.  The fine winner is guarded
+against the coarse winner (finer grids can never *increase* the energy),
+mirroring the coarse-grid-then-golden-refinement structure of the
+production jnp solver (``single_task._grid_then_golden``, the ``ref.py``
+oracle).
+
+The two sweeps match the paper's case split:
 
 * unconstrained: fc-grid over [fc_min, g1(v_max)]; V = max(v_min, g1⁻¹(fc));
   fm = closed-form optimum clamped to the box (paper §4.1);
@@ -37,14 +49,25 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.dvfs import G1_A, G1_B, G1_C, ScalingInterval, WIDE
 
 BT = 128   # tasks per block
-G = 128    # grid points per sweep
+DEFAULT_GRID = (64, 64)  # (coarse, fine) sweep points; ~16x the old flat-128
 NCOL = 16  # task-matrix columns (6 params, allowed, readjust, 5 bounds, pad)
 INF = 1e30
+
+#: A benign, fully-feasible pad task: reference-ish constants on the WIDE
+#: box with a huge deadline window, so pad rows always take the smooth
+#: energy-prior branch.  (The old ``jnp.ones`` pad encoded the degenerate
+#: box v_min=v_max=fc_min=fm_min=fm_max=1, which pushed every pad row
+#: through the INF-masked deadline-boundary sweep.)
+_PAD_ROW = np.asarray(
+    [[1.0, 1.0, 1.0, 1.0, 0.5, 0.1, 1e6, 0.0, *WIDE.bounds(), 0.0, 0.0, 0.0]],
+    np.float32)
+assert _PAD_ROW.shape == (1, NCOL)
 
 
 def _g1(v):
@@ -55,7 +78,33 @@ def _g1_inv(fc):
     return G1_B * jnp.square(jnp.maximum(fc - G1_C, 0.0)) + G1_A
 
 
-def _kernel(tasks_ref, out_ref):
+def _hier_argmin(efn, rows, g0: int, g1: int):
+    """Coarse-then-fine argmin of ``efn`` over the unit interval.
+
+    ``efn`` maps a fraction array ``[BT, k]`` to energies ``[BT, k]``.
+    Sweeps ``g0`` coarse points, brackets the winner one coarse step to
+    each side, re-sweeps ``g1`` fine points inside the bracket, and
+    returns the per-row winning fraction ``[BT]`` — guarded so the fine
+    winner is never worse than the coarse one (refinement is monotone).
+    """
+    f0 = jax.lax.broadcasted_iota(jnp.float32, (BT, g0), 1) / (g0 - 1)
+    e0 = efn(f0)
+    i0 = jnp.argmin(e0, axis=1)
+    e0_best = e0[rows, i0]
+    f0_best = f0[rows, i0]
+    step = 1.0 / (g0 - 1)
+    f_lo = jnp.clip((i0.astype(jnp.float32) - 1.0) * step, 0.0, 1.0)
+    f_hi = jnp.clip((i0.astype(jnp.float32) + 1.0) * step, 0.0, 1.0)
+    frac = jax.lax.broadcasted_iota(jnp.float32, (BT, g1), 1) / (g1 - 1)
+    f1 = f_lo[:, None] + (f_hi - f_lo)[:, None] * frac
+    e1 = efn(f1)
+    i1 = jnp.argmin(e1, axis=1)
+    e1_best = e1[rows, i1]
+    f1_best = f1[rows, i1]
+    return jnp.where(e1_best <= e0_best, f1_best, f0_best)
+
+
+def _kernel(tasks_ref, out_ref, *, g0: int, g1: int):
     t = tasks_ref[...].astype(jnp.float32)               # [BT, 16]
     p0, gamma, cc = t[:, 0:1], t[:, 1:2], t[:, 2:3]
     dd, delta, t0 = t[:, 3:4], t[:, 4:5], t[:, 5:6]
@@ -64,8 +113,7 @@ def _kernel(tasks_ref, out_ref):
     # Per-row scaling-interval bounds (columns 8-12), shape [BT, 1].
     v_min, v_max = t[:, 8:9], t[:, 9:10]
     fc_min, fm_min, fm_max = t[:, 10:11], t[:, 11:12], t[:, 12:13]
-
-    frac = jax.lax.broadcasted_iota(jnp.float32, (BT, G), 1) / (G - 1)
+    rows = jnp.arange(BT)
 
     def energy_at(v, fc, fm):
         pw = p0 + gamma * fm + cc * jnp.square(v) * fc
@@ -74,36 +122,43 @@ def _kernel(tasks_ref, out_ref):
 
     # ---- sweep 1: unconstrained, fc grid on [fc_min, g1(v_max)].
     fc_max = _g1(v_max)                                  # [BT, 1]
-    fc = fc_min + (fc_max - fc_min) * frac               # [BT, G]
-    v = jnp.maximum(v_min, _g1_inv(fc))
-    # closed-form fm (paper §4.1), clamped; gamma == 0 -> fm_max.
-    num = (p0 + cc * jnp.square(v) * fc) * dd * (1.0 - delta)
-    den = gamma * (t0 + dd * delta / fc)
-    fm = jnp.sqrt(num / jnp.maximum(den, 1e-30))
-    fm = jnp.where(gamma <= 0.0, fm_max, fm)
-    fm = jnp.clip(fm, fm_min, fm_max)
-    e_u, _, t_u = energy_at(v, fc, fm)
-    iu = jnp.argmin(e_u, axis=1)                          # [BT]
-    rows = jnp.arange(BT)
-    fc_u = fc[rows, iu]
-    v_u = v[rows, iu]
-    fm_u = fm[rows, iu]
-    t_un = t_u[rows, iu]
+
+    def unc_at(frac):
+        """frac [BT, k] -> (energy, (v, fc, fm, t)) on the optimal-V /
+        closed-form-fm manifold (paper §4.1)."""
+        fc = fc_min + (fc_max - fc_min) * frac           # [BT, k]
+        v = jnp.maximum(v_min, _g1_inv(fc))
+        # closed-form fm (paper §4.1), clamped; gamma == 0 -> fm_max.
+        num = (p0 + cc * jnp.square(v) * fc) * dd * (1.0 - delta)
+        den = gamma * (t0 + dd * delta / fc)
+        fm = jnp.sqrt(num / jnp.maximum(den, 1e-30))
+        fm = jnp.where(gamma <= 0.0, fm_max, fm)
+        fm = jnp.clip(fm, fm_min, fm_max)
+        e, _, tt = energy_at(v, fc, fm)
+        return e, (v, fc, fm, tt)
+
+    fu = _hier_argmin(lambda f: unc_at(f)[0], rows, g0, g1)
+    _, (v_1, fc_1, fm_1, t_1) = unc_at(fu[:, None])      # [BT, 1] at winner
+    v_u, fc_u, fm_u, t_un = v_1[:, 0], fc_1[:, 0], fm_1[:, 0], t_1[:, 0]
 
     # ---- sweep 2: deadline boundary t(fc, fm) = allowed, fm grid.
-    fm2 = fm_min + (fm_max - fm_min) * frac
-    slack = allowed - t0 - dd * (1.0 - delta) / fm2
-    fc_req = dd * delta / jnp.maximum(slack, 1e-30)
-    fc_req = jnp.where(delta <= 0.0, fc_min, fc_req)
-    bad = (slack <= 0.0) & (delta > 0.0)
-    fc2 = jnp.clip(fc_req, fc_min, fc_max)
-    v2 = jnp.maximum(v_min, _g1_inv(fc2))
-    e_d, _, t_d = energy_at(v2, fc2, fm2)
-    e_d = jnp.where(bad | (fc_req > fc_max + 1e-6), INF, e_d)
-    idx = jnp.argmin(e_d, axis=1)
-    fc_d = fc2[rows, idx]
-    v_d = v2[rows, idx]
-    fm_d = fm2[rows, idx]
+    def bnd_at(frac):
+        """frac [BT, k] -> (energy, (v, fc, fm)) on the t = allowed
+        manifold; infeasible points get +INF."""
+        fm2 = fm_min + (fm_max - fm_min) * frac
+        slack = allowed - t0 - dd * (1.0 - delta) / fm2
+        fc_req = dd * delta / jnp.maximum(slack, 1e-30)
+        fc_req = jnp.where(delta <= 0.0, fc_min, fc_req)
+        bad = (slack <= 0.0) & (delta > 0.0)
+        fc2 = jnp.clip(fc_req, fc_min, fc_max)
+        v2 = jnp.maximum(v_min, _g1_inv(fc2))
+        e, _, _ = energy_at(v2, fc2, fm2)
+        e = jnp.where(bad | (fc_req > fc_max + 1e-6), INF, e)
+        return e, (v2, fc2, fm2)
+
+    fb = _hier_argmin(lambda f: bnd_at(f)[0], rows, g0, g1)
+    _, (v_2, fc_2, fm_2) = bnd_at(fb[:, None])
+    v_d, fc_d, fm_d = v_2[:, 0], fc_2[:, 0], fm_2[:, 0]
 
     # ---- decision rule (== solve_with_deadline / solve_on_boundary):
     # energy-prior if the unconstrained optimum meets the deadline;
@@ -133,16 +188,23 @@ def _kernel(tasks_ref, out_ref):
     out_ref[...] = out.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interval", "interpret"))
+@functools.partial(jax.jit, static_argnames=("interval", "grid", "interpret"))
 def dvfs_solve_kernel(tasks: jax.Array, *, interval: ScalingInterval = WIDE,
+                      grid: tuple = DEFAULT_GRID,
                       interpret: bool = False) -> jax.Array:
     """tasks: [n, 8] or [n, 16] f32 (see module docstring) ->
     [n, 8] (v, fc, fm, t, p, e, deadline_prior, feasible).
 
     An 8-column matrix is widened with the static ``interval``'s bounds
     (the homogeneous legacy layout); a 16-column matrix carries per-row
-    bounds and ignores ``interval``.
+    bounds and ignores ``interval``.  ``grid=(G0, G1)`` sets the coarse /
+    fine sweep sizes of the hierarchical refinement (both >= 2); the
+    effective resolution of each 1-D sweep is ~``G0*G1/2`` points for
+    ``G0 + G1`` evaluations.
     """
+    g0, g1 = int(grid[0]), int(grid[1])
+    if g0 < 2 or g1 < 2:
+        raise ValueError(f"grid sizes must be >= 2, got {grid}")
     n = tasks.shape[0]
     if tasks.shape[1] == 8:
         bounds = jnp.broadcast_to(
@@ -154,10 +216,11 @@ def dvfs_solve_kernel(tasks: jax.Array, *, interval: ScalingInterval = WIDE,
                          f"got {tasks.shape[1]}")
     n_pad = -(-n // BT) * BT
     if n_pad != n:
-        pad = jnp.ones((n_pad - n, NCOL), tasks.dtype)  # benign dummy tasks
+        pad = jnp.broadcast_to(jnp.asarray(_PAD_ROW, tasks.dtype),
+                               (n_pad - n, NCOL))
         tasks = jnp.concatenate([tasks, pad], axis=0)
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, g0=g0, g1=g1),
         grid=(n_pad // BT,),
         in_specs=[pl.BlockSpec((BT, NCOL), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((BT, 8), lambda i: (i, 0)),

@@ -13,15 +13,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import solver_cache
 from repro.core.dvfs import DvfsParams, ScalingInterval, WIDE
 from repro.core.single_task import DvfsSolution
-from repro.kernels.dvfs_opt import dvfs_solve_kernel
+from repro.kernels.dvfs_opt import (BT, DEFAULT_GRID, NCOL, _PAD_ROW,
+                                    dvfs_solve_kernel)
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
+#: Below this row count a multi-device split costs more in transfer/dispatch
+#: than it saves in compute.
+SHARD_MIN_ROWS = 4096
 
-def _interpret() -> bool:
+
+def default_interpret() -> bool:
+    """THE ``interpret=`` policy for every kernel call site: run the Pallas
+    bodies as JAX ops unless a real TPU backend is attached, so CI, laptops,
+    and TPU hosts all exercise the same code path without per-caller flags."""
     return jax.default_backend() != "tpu"
+
+
+_interpret = default_interpret  # back-compat alias for older call sites
 
 
 def _pad_head_dim(x: jax.Array, to: int = 128) -> jax.Array:
@@ -55,10 +67,57 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
     return _ssd(x, dt, a, b, c, chunk=chunk, interpret=_interpret())
 
 
+def dvfs_solve_matrix(mat: np.ndarray, *, grid: tuple = DEFAULT_GRID,
+                      interpret: Optional[bool] = None,
+                      shard: bool = True) -> np.ndarray:
+    """Dispatch a ``[m, 16]`` (or ``[m, 13]`` key-layout) task matrix to the
+    Pallas solver, sharded across local devices when it pays off.
+
+    The matrix is padded to a whole number of kernel blocks with benign
+    rows, split into equal per-device chunks (all chunks one compiled
+    shape), dispatched asynchronously to each device, and re-concatenated —
+    per-row results are bitwise identical to the single-device path because
+    the solver is row-independent.  Falls back to one local dispatch when
+    there is a single device or the batch is under ``SHARD_MIN_ROWS``.
+    Returns the ``[m, 8]`` solution matrix as numpy.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    mat = np.asarray(mat, np.float32)
+    if mat.shape[1] == solver_cache.KEY_COLS:  # widen key layout -> 16 cols
+        mat = np.concatenate(
+            [mat, np.zeros((mat.shape[0], NCOL - solver_cache.KEY_COLS),
+                           np.float32)], axis=1)
+    m = mat.shape[0]
+    devs = jax.local_devices()
+    nd = 1
+    if shard and len(devs) > 1 and m >= SHARD_MIN_ROWS:
+        nd = 1 << (len(devs).bit_length() - 1)   # pow-2 device count
+        while nd > 1 and -(-m // nd) < BT:
+            nd //= 2
+    if nd == 1:
+        return np.asarray(dvfs_solve_kernel(jnp.asarray(mat), grid=grid,
+                                            interpret=interpret))
+    per_dev = -(-m // nd)
+    chunk = -(-per_dev // BT) * BT  # whole kernel blocks per device
+    if nd * chunk != m:
+        pad = np.broadcast_to(_PAD_ROW, (nd * chunk - m, NCOL))
+        mat = np.concatenate([mat, pad], axis=0)
+    parts = [dvfs_solve_kernel(
+                 jax.device_put(jnp.asarray(mat[i * chunk:(i + 1) * chunk]),
+                                devs[i]),
+                 grid=grid, interpret=interpret)
+             for i in range(nd)]  # dispatches are async; concat blocks
+    return np.concatenate([np.asarray(p) for p in parts], axis=0)[:m]
+
+
 def dvfs_solve(params: DvfsParams, allowed: np.ndarray,
                interval: ScalingInterval = WIDE,
                readjust: bool = False,
-               interval_rows: Optional[np.ndarray] = None) -> DvfsSolution:
+               interval_rows: Optional[np.ndarray] = None,
+               dedup: bool = True,
+               grid: tuple = DEFAULT_GRID,
+               cache: Optional["solver_cache.SolveCache"] = None) -> DvfsSolution:
     """Batched single-task DVFS optimum via the Pallas kernel.
 
     Drop-in for ``single_task.solve_with_deadline`` (same DvfsSolution
@@ -72,23 +131,32 @@ def dvfs_solve(params: DvfsParams, allowed: np.ndarray,
     gives every row its own scaling box — the heterogeneous-class path
     (``machines.configure_classes``) stacks one class block per interval
     and solves them all in this one dispatch.  When omitted, the static
-    ``interval`` applies to every row."""
+    ``interval`` applies to every row.
+
+    ``dedup=True`` routes the matrix through the unique-row dedup +
+    process-wide LRU solve cache (:mod:`repro.core.solver_cache`) — bit
+    identical output, only previously-unseen rows touch the kernel.
+    ``grid`` sets the kernel's hierarchical (coarse, fine) sweep sizes;
+    ``cache=None`` means the global cache when deduping.
+    """
     cols = [np.asarray(f, np.float32) for f in params.astuple()]
     n = cols[0].shape[0]
-    flag = np.ones(n, np.float32) if readjust else np.zeros(n, np.float32)
-    cols = cols + [np.asarray(allowed, np.float32), flag]
     if interval_rows is not None:
         bounds = np.asarray(interval_rows, np.float32)
         if bounds.shape != (n, 5):
             raise ValueError(f"interval_rows must be [n, 5], got {bounds.shape}")
-        tasks = np.concatenate(
-            [np.stack(cols, axis=1), bounds, np.zeros((n, 3), np.float32)],
-            axis=1)
     else:
-        tasks = np.stack(cols, axis=1)
-    out = np.asarray(dvfs_solve_kernel(jnp.asarray(tasks), interval=interval,
-                                       interpret=_interpret()))
-    return DvfsSolution(v=out[:, 0], fc=out[:, 1], fm=out[:, 2],
-                        time=out[:, 3], power=out[:, 4], energy=out[:, 5],
-                        deadline_prior=out[:, 6] > 0.5,
-                        feasible=out[:, 7] > 0.5)
+        bounds = np.asarray(interval.bounds(), np.float32)
+    keys = solver_cache.build_keys(cols, allowed, readjust, bounds)
+
+    def solve(km: np.ndarray) -> np.ndarray:
+        return dvfs_solve_matrix(km, grid=grid)
+
+    if dedup:
+        tag = f"k{int(grid[0])}x{int(grid[1])}"
+        out = solver_cache.solve_rows(
+            keys, solve, tag=tag,
+            cache=solver_cache.GLOBAL_CACHE if cache is None else cache)
+    else:
+        out = solve(keys)
+    return solver_cache.rows_to_solution(out)

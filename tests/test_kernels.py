@@ -103,8 +103,9 @@ def test_dvfs_kernel_full_library():
            np.zeros(len(lib), np.float32)], axis=1)
     expect = ref.dvfs_solve_ref(tasks_mat)
     rel = np.abs(sol.energy - expect[:, 5]) / expect[:, 5]
-    assert float(np.max(rel)) < 1e-2
-    assert float(np.mean(sol.deadline_prior == (expect[:, 6] > .5))) > 0.97
+    # hierarchical (G0, G1) refinement: ~1e-7 typical, vs ~1e-5 flat-128
+    assert float(np.max(rel)) < 1e-5
+    assert float(np.mean(sol.deadline_prior == (expect[:, 6] > .5))) > 0.99
     # feasible solutions respect the deadline
     ok = sol.feasible
     assert np.all(sol.time[ok] <= np.asarray(allowed)[ok] * (1 + 1e-4))
@@ -123,8 +124,8 @@ def test_dvfs_kernel_narrow_interval():
            np.zeros(len(lib), np.float32)], axis=1)
     expect = ref.dvfs_solve_ref(tasks_mat, interval=dvfs.NARROW)
     rel = np.abs(sol.energy - expect[:, 5]) / expect[:, 5]
-    assert float(np.max(rel)) < 1e-2
-    assert float(np.mean(sol.deadline_prior == (expect[:, 6] > .5))) > 0.97
+    assert float(np.max(rel)) < 1e-5
+    assert float(np.mean(sol.deadline_prior == (expect[:, 6] > .5))) > 0.99
     # solutions stay inside the NARROW box
     assert np.all(sol.fm >= dvfs.NARROW.fm_min - 1e-5)
     assert np.all(sol.fm <= dvfs.NARROW.fm_max + 1e-5)
