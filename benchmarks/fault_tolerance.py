@@ -1,0 +1,192 @@
+"""Fault tolerance of the online engine: energy overhead and violation
+rate under server failure/recovery injection (``repro.core.faults``).
+
+The harness sweeps **failure rate x trace shape** over one arrival trace:
+
+* shapes — ``fraction`` (a fixed fraction of the fleet crashes once, no
+  repair), ``mtbf`` (exponential per-server crash/repair alternation) and
+  ``mtbf-norepair`` (crashed servers stay down);
+* rates — multiples of a base failure intensity (the fraction of servers,
+  or the inverse MTBF).
+
+Per cell it reports the overhead of fault recovery against the
+failure-free run of the same trace — ``e_total`` overhead (signed: a crash
+can also *save* idle energy by retiring a server early) and the violation
+rate — and asserts the scalar and vector placement paths stay bit-identical
+under injection (the recovery path is shared, so this pins the engine-level
+fault transitions too).
+
+``--smoke`` is the CI guard: one 100k-task day with a pinned
+1%-of-the-fleet failure trace must complete inside ``--budget`` seconds
+with bit-equal scalar/vector energy, every task carrying exactly one live
+record, and a re-run of the same seed producing the identical result
+(deterministic replay).
+
+    PYTHONPATH=src python -m benchmarks.fault_tolerance --tasks 20000
+    PYTHONPATH=src python -m benchmarks.fault_tolerance --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import faults, online, tasks
+
+#: sweep axes (kept small: every cell runs scalar AND vector)
+SHAPES = ("fraction", "mtbf", "mtbf-norepair")
+RATES = (0.5, 1.0, 2.0)
+BASE_FRACTION = 0.01        # of the estimated server fleet, per day
+BASE_MTBF = 2000.0          # slots of mean up-time at rate 1.0
+MTTR = 30.0                 # slots of mean repair time
+
+
+def build_trace(shape: str, rate: float, n_servers: int, horizon: float,
+                seed: int) -> faults.FaultTrace:
+    if shape == "fraction":
+        return faults.FaultTrace.fraction(n_servers,
+                                          min(1.0, BASE_FRACTION * rate),
+                                          horizon, seed=seed)
+    mttr = None if shape == "mtbf-norepair" else MTTR
+    return faults.FaultTrace.sample(n_servers, horizon,
+                                    mtbf=BASE_MTBF / rate, mttr=mttr,
+                                    seed=seed)
+
+
+def run_cell(ts, cfgs, trace, l: int, theta: float, scalar: bool = True,
+             baseline=None) -> Dict:
+    """One (trace, scheduler) cell: vector run, optional scalar bit-identity
+    check, overheads vs the failure-free baseline."""
+    kw = dict(l=l, theta=theta, algorithm="edl", cfgs=cfgs, bound=False,
+              faults=trace)
+    t0 = time.time()
+    r_vec = online.schedule_online(ts, placement="vector", **kw)
+    t_vec = time.time() - t0
+    out = {
+        "vector_s": t_vec, "e_total": r_vec.e_total,
+        "violations": r_vec.violations,
+        "violation_rate": r_vec.violations / len(ts),
+        "fault_stats": r_vec.fault_stats,
+    }
+    if baseline is not None:
+        out["e_overhead_frac"] = r_vec.e_total / baseline.e_total - 1.0
+        out["extra_violations"] = r_vec.violations - baseline.violations
+    if scalar:
+        r_sca = online.schedule_online(ts, placement="scalar", **kw)
+        assert r_sca.e_total == r_vec.e_total, (
+            f"scalar/vector diverged under faults: {r_sca.e_total!r} vs "
+            f"{r_vec.e_total!r}")
+        assert r_sca.violations == r_vec.violations
+        assert r_sca.fault_stats == r_vec.fault_stats
+    # exactly one live record per task, no matter how many crashes
+    live = np.zeros(len(ts), dtype=np.int64)
+    for a in r_vec.assignments:
+        if not a.failed:
+            live[a.task] += 1
+    assert np.all(live == 1), "task lost or duplicated under fault recovery"
+    return out
+
+
+def sweep(n_tasks: int, l: int = 4, theta: float = 0.9, seed: int = 0,
+          scalar: bool = True, verbose: bool = True) -> Dict:
+    lib = tasks.app_library()
+    ts = tasks.generate_trace(n_tasks, pattern="uniform",
+                              horizon=tasks.DAY_SLOTS, seed=seed,
+                              library=lib)
+    mcs = online.machines.reference_classes()
+    cfgs = online.online_configs(ts, mcs)
+    n_servers = max(1, tasks.peak_pair_estimate(ts) // l)
+    base = online.schedule_online(ts, l=l, theta=theta, algorithm="edl",
+                                  cfgs=cfgs, bound=False)
+    if verbose:
+        print(f"failure-free: e_total={base.e_total:.3e} "
+              f"violations={base.violations} fleet~{n_servers} servers",
+              flush=True)
+    out = {"n_tasks": len(ts), "n_servers_est": n_servers,
+           "e_total_base": base.e_total, "violations_base": base.violations,
+           "cells": {}}
+    for shape in SHAPES:
+        for rate in RATES:
+            trace = build_trace(shape, rate, n_servers,
+                                float(tasks.DAY_SLOTS), seed + 17)
+            cell = run_cell(ts, cfgs, trace, l, theta, scalar=scalar,
+                            baseline=base)
+            out["cells"][(shape, rate)] = cell
+            if verbose:
+                st = cell["fault_stats"]
+                print(f"{shape:13s} x{rate:3.1f}: failures={st['failures']:4d} "
+                      f"orphans={st['orphans']:5d} degraded={st['degraded']:4d} "
+                      f"e_overhead={cell['e_overhead_frac']:+7.3%} "
+                      f"viol_rate={cell['violation_rate']:.4%}", flush=True)
+            record(f"fault_tolerance/{shape}_x{rate}",
+                   cell["vector_s"] / len(ts) * 1e6,
+                   f"e_overhead={cell['e_overhead_frac']:+.3%}, "
+                   f"{cell['violations']} violations")
+    return out
+
+
+def smoke(n_tasks: int, budget: float, l: int = 4, theta: float = 0.9,
+          seed: int = 0) -> Dict:
+    """The CI tripwire: a 100k-task day under a pinned 1%-of-fleet failure
+    trace — budgeted wall clock, scalar/vector bit-identity, exactly one
+    live record per task, deterministic replay."""
+    lib = tasks.app_library()
+    ts = tasks.generate_trace(n_tasks, pattern="uniform",
+                              horizon=tasks.DAY_SLOTS, seed=seed,
+                              library=lib)
+    mcs = online.machines.reference_classes()
+    cfgs = online.online_configs(ts, mcs)
+    n_servers = max(1, tasks.peak_pair_estimate(ts) // l)
+    trace = faults.FaultTrace.fraction(n_servers, BASE_FRACTION,
+                                       float(tasks.DAY_SLOTS), seed=7)
+    # warm the deferred-readjustment compile out of the timed run
+    online.schedule_online(ts, l=l, theta=theta, algorithm="edl", cfgs=cfgs,
+                           bound=False)
+    t0 = time.time()
+    cell = run_cell(ts, cfgs, trace, l, theta, scalar=True)
+    t_all = time.time() - t0
+    assert cell["fault_stats"]["failures"] > 0, "smoke trace injected nothing"
+    assert cell["vector_s"] <= budget, (
+        f"fault-injected run took {cell['vector_s']:.1f}s "
+        f"(> {budget:.0f}s budget)")
+    replay = run_cell(ts, cfgs, trace, l, theta, scalar=False)
+    assert replay["e_total"] == cell["e_total"], "replay diverged"
+    assert replay["fault_stats"] == cell["fault_stats"]
+    print(f"smoke OK: {n_tasks} tasks, {cell['fault_stats']['failures']} "
+          f"failures, {cell['violations']} violations, "
+          f"vector={cell['vector_s']:.2f}s <= {budget:.0f}s, "
+          f"scalar/vector bit-identical, replay bit-identical", flush=True)
+    record(f"fault_tolerance/smoke_{n_tasks}",
+           t_all / n_tasks * 1e6,
+           f"{cell['fault_stats']['failures']} failures, "
+           f"{cell['violations']} violations")
+    return cell
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--tasks", type=int, default=20000)
+    ap.add_argument("--l", type=int, default=4)
+    ap.add_argument("--theta", type=float, default=0.9)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-scalar", action="store_true",
+                    help="skip the scalar bit-identity runs (large sweeps)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: pinned 1%%-fleet trace on 100k tasks")
+    ap.add_argument("--budget", type=float, default=240.0,
+                    help="--smoke wall-clock cap for the vectorized run (s)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        smoke(max(args.tasks, 100000), args.budget, l=args.l,
+              theta=args.theta, seed=args.seed)
+    else:
+        sweep(args.tasks, l=args.l, theta=args.theta, seed=args.seed,
+              scalar=not args.no_scalar)
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,11 @@ def main(argv=None):
     offline_scale.run_one(100000 if args.full else 20000, "edl",
                           time_kernel=False, verbose=False)
 
+    print("# --- Fault tolerance (failure rate x trace shape) ---",
+          flush=True)
+    from benchmarks import fault_tolerance
+    fault_tolerance.sweep(20000 if args.full else 3000, verbose=False)
+
     if not args.skip_roofline:
         print("# --- Roofline (deliverable g; from dry-run JSONs) ---",
               flush=True)

@@ -56,6 +56,11 @@ class Assignment:
     energy: float
     readjusted: bool = False
     class_id: int = 0   # machine class of the hosting pair (heterogeneity)
+    #: the hosting pair crashed before ``finish``: the record is truncated
+    #: (or tombstoned, finish == start) at the failure instant, its energy
+    #: re-priced to the span actually run, and the task re-placed as a new
+    #: record (repro.core.faults).  Violation accounting skips failed rows.
+    failed: bool = False
 
 
 @dataclasses.dataclass
@@ -75,6 +80,9 @@ class ScheduleResult:
     #: the §5 analytical lower bound on e_total for this task set
     #: (repro.core.bounds.theoretical_bound); 0.0 when not computed.
     e_bound: float = 0.0
+    #: fault-injection counters (repro.core.faults.FaultInjector.stats);
+    #: None for a failure-free run.
+    fault_stats: dict = None
 
     @property
     def e_total(self) -> float:

@@ -90,6 +90,13 @@ class ClusterEngine:
         # incrementally (mu only ever moves forward), so settle() never
         # re-reduces the pair columns.
         self._mu_srv = np.zeros(cap_s)
+        # Fault state (repro.core.faults): failed pairs are ineligible, and
+        # a server with a failed pair is withheld from the wake pool until
+        # revived.  _any_failed gates every fast-path check so the
+        # failure-free masks stay bit-identical to the pre-fault engine.
+        self._pair_failed = np.zeros(cap_p, dtype=bool)
+        self._srv_failed = np.zeros(cap_s, dtype=bool)
+        self._any_failed = False
 
     # Back-compat scalar views (meaningful for the single-class engine).
     @property
@@ -133,6 +140,8 @@ class ClusterEngine:
         self._mu = np.concatenate([self._mu, np.zeros(pad)])
         self._busy = np.concatenate([self._busy, np.zeros(pad)])
         self._cls = np.concatenate([self._cls, np.zeros(pad, dtype=np.int64)])
+        self._pair_failed = np.concatenate(
+            [self._pair_failed, np.zeros(pad, dtype=bool)])
 
     def _grow_servers(self, extra: int):
         need = self.n_servers + extra
@@ -148,6 +157,8 @@ class ClusterEngine:
         self._srv_cls = np.concatenate([self._srv_cls,
                                         np.zeros(pad, dtype=np.int64)])
         self._mu_srv = np.concatenate([self._mu_srv, np.zeros(pad)])
+        self._srv_failed = np.concatenate(
+            [self._srv_failed, np.zeros(pad, dtype=bool)])
 
     # -- transitions ---------------------------------------------------------
     def open_pair(self, mu0: float = 0.0, class_id: int = 0) -> int:
@@ -205,8 +216,11 @@ class ClusterEngine:
     def acquire_pair(self, t: float, class_id: int = 0) -> int:
         """A fresh pair of ``class_id``: prefer re-powering an off server of
         that class over building a new one."""
-        off = np.flatnonzero(~self._on[: self.n_servers]
-                             & (self._srv_cls[: self.n_servers] == class_id))
+        avail = ~self._on[: self.n_servers] \
+            & (self._srv_cls[: self.n_servers] == class_id)
+        if self._any_failed:
+            avail &= ~self._srv_failed[: self.n_servers]
+        off = np.flatnonzero(avail)
         if off.size:
             sid = int(off[0])
             self.wake_server(sid, t)
@@ -266,6 +280,84 @@ class ClusterEngine:
     # run, overcharging E_idle by the full arrival gap past ``mu + rho``).
     drs_sweep = settle
 
+    # -- fault transitions (repro.core.faults) -------------------------------
+    @property
+    def pair_failed(self) -> np.ndarray:
+        """Failed-pair mask, shape ``[n_pairs]``."""
+        return self._pair_failed[: self.n_pairs]
+
+    def fail_pairs(self, t: float, pids, busy_rollback=None) -> np.ndarray:
+        """Crash the given pairs at time ``t``: energy settles EXACTLY at
+        the failure instant — never past it.
+
+        Callers must :meth:`settle` to ``t`` first, so every ON server has
+        its power-off event strictly after ``t`` and the crash books the
+        powered-on span ``t - on_since`` with no double counting.  Per
+        failed pair the engine (a) truncates its finish time to ``t`` (an
+        in-flight task dies at the crash), (b) subtracts ``busy_rollback``
+        (the caller-computed booked-busy portion past ``t``; the
+        :class:`repro.core.faults.FaultInjector` derives it from the
+        orphaned assignment records), and (c) marks the pair ineligible.
+        A server whose pairs have ALL failed while powered on is a hard
+        crash: its on-span is booked up to ``t`` (no ``rho`` power-off
+        tail — the machine lost power, it did not drain) and it leaves the
+        wake pool until :meth:`revive_pairs`.  Already-failed pairs are
+        no-ops.  Returns the pair ids actually transitioned.
+        """
+        assert self.server_mode
+        pids = np.asarray(pids, dtype=np.int64)
+        if busy_rollback is not None:
+            rb = np.asarray(busy_rollback, dtype=np.float64)
+        fresh_m = ~self._pair_failed[pids]
+        fresh = pids[fresh_m]
+        if fresh.size == 0:
+            return fresh
+        self._pair_failed[fresh] = True
+        self._any_failed = True
+        if busy_rollback is not None:
+            np.subtract.at(self._busy, fresh, rb[fresh_m])
+        self._mu[fresh] = np.minimum(self._mu[fresh], t)
+        for sid in np.unique(fresh // self.l).tolist():
+            lo = sid * self.l
+            hi = lo + self.l
+            # mu only ever moved *down* here: re-reduce this server's block.
+            self._mu_srv[sid] = self._mu[lo:hi].max()
+            self._srv_failed[sid] = True
+            if self._on[sid] and self._pair_failed[lo:hi].all():
+                self._on_time[sid] += t - self._on_since[sid]
+                self._on[sid] = False
+        return fresh
+
+    def revive_pairs(self, t: float, pids) -> np.ndarray:
+        """Repair the given pairs at time ``t`` (the inverse transition).
+
+        A revived pair on a still-powered server becomes assignable from
+        ``t`` (its ``mu`` is floored to ``t``); a revived pair on an OFF
+        server costs nothing now — the server merely rejoins the wake pool
+        (once none of its pairs is failed) and a later
+        :meth:`acquire_pair` powers it on through the normal DRS event.
+        Pairs that are not failed are no-ops.  Returns the pair ids
+        actually transitioned.
+        """
+        assert self.server_mode
+        pids = np.asarray(pids, dtype=np.int64)
+        sel = pids[self._pair_failed[pids]]
+        if sel.size == 0:
+            return sel
+        self._pair_failed[sel] = False
+        for sid in np.unique(sel // self.l).tolist():
+            lo = sid * self.l
+            hi = lo + self.l
+            if not self._pair_failed[lo:hi].any():
+                self._srv_failed[sid] = False
+            if self._on[sid]:
+                blk = sel[(sel >= lo) & (sel < hi)]
+                self._mu[blk] = np.maximum(self._mu[blk], t)
+                if self._mu_srv[sid] < t:
+                    self._mu_srv[sid] = t
+        self._any_failed = bool(self._pair_failed[: self.n_pairs].any())
+        return sel
+
     # -- pair selection (the policy rules' vectorized primitives) ------------
     def on_pair_mask(self) -> np.ndarray:
         """Mask of pairs whose server is powered on, shape ``[n_pairs]``."""
@@ -273,11 +365,13 @@ class ClusterEngine:
 
     def eligible_mask(self, class_id: Optional[int] = None):
         """Mask of assignable pairs (``None`` == all): every pair offline,
-        only pairs of powered-on servers online; restricted to one machine
-        class when ``class_id`` is given."""
+        only pairs of powered-on servers online, never a failed pair;
+        restricted to one machine class when ``class_id`` is given."""
         mask = None
         if self.server_mode:
             mask = np.repeat(self._on[: self.n_servers], self.l)
+            if self._any_failed:
+                mask = mask & ~self._pair_failed[: self.n_pairs]
         if class_id is not None and len(self.classes) > 1:
             cmask = self._cls[: self.n_pairs] == class_id
             mask = cmask if mask is None else (mask & cmask)

@@ -72,6 +72,7 @@ from repro.core import bounds, cluster as cl
 from repro.core import dvfs, machines
 from repro.core.dvfs import ScalingInterval
 from repro.core.engine import ClusterEngine
+from repro.core.faults import FaultInjector, FaultTrace, make_degrade
 from repro.core.placement import PendingRow, PlacementContext
 from repro.core.scheduling import (chosen_feasibility, count_violations,
                                    fill_readjusted)
@@ -127,7 +128,8 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                     classes=None, placement: str = "vector",
                     cfgs: Optional[List[TaskConfig]] = None,
                     bound: bool = True,
-                    dedup: bool = True) -> cl.ScheduleResult:
+                    dedup: bool = True,
+                    faults: Optional[FaultTrace] = None) -> cl.ScheduleResult:
     """Run the online simulation end to end (Algorithms 4-6).
 
     ``algorithm`` is ``"edl"`` (Algorithm 5, SPT + theta-readjustment) or
@@ -143,6 +145,13 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     simulation hot path).  ``dedup=False`` opts every DVFS solve out of the
     unique-row dedup + solve cache (the default routes them through it,
     bit-identically).
+
+    ``faults`` injects a :class:`repro.core.faults.FaultTrace`: every
+    fail/revive event with ``t <= slot`` is applied — energy settled at the
+    exact event time — before the slot's arrival group is placed, orphaned
+    tasks re-enter placement with shrunken DVFS windows, and the result
+    carries ``fault_stats``.  ``faults=None`` (default) leaves every
+    failure check disengaged, bit-identical to the pre-fault behaviour.
     """
     algorithm = algorithm.lower()
     if algorithm not in ("edl", "bin"):
@@ -168,18 +177,27 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                            assignments=assignments, pending=pending,
                            order_cls=order_cls)
 
+    injector = None
+    if faults is not None:
+        injector = FaultInjector(
+            eng, ctx, faults, rule=("wf" if algorithm == "edl" else "ff"),
+            degrade=make_degrade(task_set, mcs, interval, use_dvfs))
+
     for slot, idx in _slot_groups(task_set):
         t_now = float(slot)
+        if injector is not None:
+            # Apply every failure/recovery event up to this slot, each
+            # settled at its exact time, BEFORE placing the slot's arrivals.
+            injector.advance(t_now)
         eng.settle(t_now)
 
         order = np.argsort(deadline[idx], kind="stable")  # EDF
 
+        base = len(assignments)
         if algorithm == "bin" and slot == 0:
             # Algorithm 6 offline phase: worst-fit on task utilization.
             ctx.binpack_offline_util(idx, order, t_now)
-            continue
-
-        if placement == "vector":
+        elif placement == "vector":
             if algorithm == "bin":
                 ctx.place_group_select(idx, order, t_now, "ff")
             else:
@@ -187,10 +205,17 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
         else:
             ctx.place_group_scalar(idx, order, t_now,
                                    "wf" if algorithm == "edl" else "ff")
+        if injector is not None:
+            injector.register(base)
+
+    if injector is not None:
+        injector.advance(np.inf)       # events after the last arrival slot
 
     # Deferred theta-readjustment solves: one batched dispatch per class.
     fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs,
                     dedup=dedup)
+    if injector is not None:
+        injector.finalize_records()    # re-price truncated records
 
     e_idle, e_overhead, n_servers = eng.finalize()
     e_run = float(sum(a.energy for a in assignments))
@@ -206,4 +231,5 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
         n_pairs=eng.n_pairs, n_servers=n_servers,
         violations=violations, assignments=assignments, makespan=mk,
         feasible_pairs=eng.feasible_pairs, e_bound=e_bound,
+        fault_stats=dict(injector.stats) if injector is not None else None,
     )

@@ -859,6 +859,110 @@ class PlacementContext:
                 assignments.append(make_assignment(gidx, pid, start, cfg_c,
                                                    class_id=c))
 
+    def place_orphans(self, tids: np.ndarray, t_now: float, rule: str,
+                      degrade=None) -> Tuple[int, int]:
+        """Deadline-aware re-placement of tasks orphaned by a pair failure
+        (the fault-recovery half of :mod:`repro.core.faults`).
+
+        One scalar loop shared verbatim by the scalar and vector placement
+        modes — failures are rare events, so bit-identity between the modes
+        under injection comes for free instead of by a second batched
+        implementation.  Policy, in EDF order per orphan:
+
+        * try the classes in the task's preference order with the normal
+          pair rule (``"wf"`` worst fit for EDL, ``"ff"`` first fit for the
+          bin baseline); a fit at the optimal length is placed like any
+          arrival;
+        * EDL only: when the worst-fit pair cannot host the optimal length,
+          shrink to the remaining window ``d - start`` down to the class's
+          ``t_min`` floor and queue the boundary re-solve on the shared
+          deferred ``readjust_batch`` dispatch.  θ is deliberately ignored
+          here — recovery prefers a deadline met at higher speed over a
+          counted violation;
+        * otherwise fall back to a fresh pair of the primary class; if even
+          a fresh pair cannot meet the deadline, the *graceful degradation*
+          step books the task anyway — at the ``degrade`` callback's
+          max-speed setting (EDL) or the configured setting (bin) — so the
+          miss is counted as a violation and a failure trace can never
+          crash a run.
+
+        Returns ``(n_restarted, n_degraded)``."""
+        tids = np.asarray(tids, dtype=np.int64)
+        if tids.size == 0:
+            return 0, 0
+        eng = self.eng
+        cfgs = self.cfgs
+        deadline = self.deadline
+        assignments = self.assignments
+        pending = self.pending
+        n_degraded = 0
+        order = np.argsort(deadline[tids], kind="stable")     # EDF
+        for g in tids[order].tolist():
+            d = float(deadline[g])
+            placed = False
+            for c in self.order_cls[:, g]:
+                c = int(c)
+                cfg_c = cfgs[c]
+                t_hat = float(cfg_c.t_hat[g])
+                if rule == "wf":
+                    pid = eng.worst_fit(class_id=c)
+                    if pid < 0:
+                        continue
+                    start = max(t_now, float(eng.mu[pid]))
+                    window = d - start
+                    if window >= t_hat - _EPS:
+                        eng.assign(pid, start, t_hat)
+                        assignments.append(make_assignment(
+                            g, pid, start, cfg_c, class_id=c))
+                        placed = True
+                        break
+                    if window >= float(cfg_c.t_min[g]) - _EPS:
+                        eng.assign(pid, start, window)
+                        pending.append((len(assignments), g, window, c))
+                        assignments.append(make_assignment(
+                            g, pid, start, cfg_c, duration=window,
+                            readjusted=True, class_id=c))
+                        placed = True
+                        break
+                else:
+                    pid = eng.first_fit(t_now, d, t_hat, class_id=c)
+                    if pid >= 0:
+                        start = max(t_now, float(eng.mu[pid]))
+                        eng.assign(pid, start, t_hat)
+                        assignments.append(make_assignment(
+                            g, pid, start, cfg_c, class_id=c))
+                        placed = True
+                        break
+            if placed:
+                continue
+            c = int(self.primary[g])
+            cfg_c = cfgs[c]
+            t_hat = float(cfg_c.t_hat[g])
+            pid = self.acquire_fresh(t_now, c)
+            start = max(t_now, float(eng.mu[pid]))            # == t_now
+            window = d - start
+            if window < t_hat - _EPS:
+                if rule == "wf" and window >= float(cfg_c.t_min[g]) - _EPS:
+                    eng.assign(pid, start, window)
+                    pending.append((len(assignments), g, window, c))
+                    assignments.append(make_assignment(
+                        g, pid, start, cfg_c, duration=window,
+                        readjusted=True, class_id=c))
+                    continue
+                n_degraded += 1
+                if rule == "wf" and degrade is not None:
+                    v, fc, fm, t_run, p = degrade(g, c)
+                    eng.assign(pid, start, t_run)
+                    assignments.append(cl.Assignment(
+                        task=g, pair=pid, start=start, finish=start + t_run,
+                        v=v, fc=fc, fm=fm, power=p, energy=p * t_run,
+                        class_id=c))
+                    continue
+            eng.assign(pid, start, t_hat)
+            assignments.append(make_assignment(g, pid, start, cfg_c,
+                                               class_id=c))
+        return int(tids.size), n_degraded
+
     def binpack_offline_util(self, idx, order, t_now: float):
         """Algorithm 6, lines 1-7 (the online baseline's offline phase):
         worst-fit on task *utilization*, cap at 1.0.

@@ -136,12 +136,15 @@ def count_violations(assignments: List[cl.Assignment], deadline: np.ndarray,
                      feasible: np.ndarray) -> int:
     """Each violated task counts exactly once: infeasible at configuration
     time (cannot meet its deadline at max speed) OR finished past its
-    deadline — never both."""
+    deadline — never both.  Records truncated by a server failure are
+    skipped: the task is judged by its re-placed record (every task keeps
+    exactly one live record under fault injection)."""
     violated = ~np.asarray(feasible, dtype=bool)
     if assignments:
-        n = len(assignments)
-        t = np.fromiter((a.task for a in assignments), np.int64, n)
-        f = np.fromiter((a.finish for a in assignments), np.float64, n)
+        t = np.fromiter((a.task for a in assignments if not a.failed),
+                        np.int64)
+        f = np.fromiter((a.finish for a in assignments if not a.failed),
+                        np.float64)
         violated[t[f > deadline[t] + 1e-6]] = True
     return int(np.sum(violated))
 
@@ -149,16 +152,18 @@ def count_violations(assignments: List[cl.Assignment], deadline: np.ndarray,
 def chosen_feasibility(cfgs: Sequence[TaskConfig],
                        assignments: List[cl.Assignment],
                        n_tasks: int) -> np.ndarray:
-    """Per-task feasibility on the class each task actually ran on."""
+    """Per-task feasibility on the class each task actually ran on (for a
+    task re-placed after a server failure: the class of its live record —
+    failed records are skipped)."""
     feas = np.ones(n_tasks, dtype=bool)
     if not assignments:
         return feas
-    n = len(assignments)
-    t = np.fromiter((a.task for a in assignments), np.int64, n)
+    t = np.fromiter((a.task for a in assignments if not a.failed), np.int64)
     if len(cfgs) == 1:
         feas[t] = np.asarray(cfgs[0].feasible, bool)[t]
         return feas
-    cid = np.fromiter((a.class_id for a in assignments), np.int64, n)
+    cid = np.fromiter((a.class_id for a in assignments if not a.failed),
+                      np.int64)
     for c in np.unique(cid):
         tc = t[cid == c]
         feas[tc] = np.asarray(cfgs[int(c)].feasible, bool)[tc]

@@ -314,6 +314,26 @@ def no_dvfs_config(params: DvfsParams, allowed) -> TaskConfig:
     )
 
 
+def max_speed_setting(params: DvfsParams,
+                      interval: ScalingInterval = dvfs.WIDE):
+    """Every task at the interval's maximum speed: ``(v_max, fc_max,
+    fm_max)``, with ``t`` equal to the class ``t_min`` bitwise (both are
+    :func:`repro.core.dvfs.min_time` on the same params/interval).
+
+    The graceful-degradation setting of the fault-recovery policy
+    (:meth:`repro.core.placement.PlacementContext.place_orphans`): a task
+    re-placed after a server failure that cannot meet its deadline on any
+    pair runs flat out, and the remaining miss is counted as a violation.
+    Returns numpy arrays ``(v, fc, fm, t, p)``.
+    """
+    t = np.asarray(dvfs.min_time(params, interval), np.float64)
+    p = np.asarray(dvfs.power(params, interval.v_max, interval.fc_max,
+                              interval.fm_max), np.float64)
+    n = t.shape[0]
+    return (np.full(n, interval.v_max), np.full(n, interval.fc_max),
+            np.full(n, interval.fm_max), t, np.broadcast_to(p, (n,)))
+
+
 def _dedup_solve(params: DvfsParams, allowed, interval: ScalingInterval,
                  boundary: bool) -> DvfsSolution:
     """Route a batched jnp solve through the unique-row dedup + process-wide

@@ -248,3 +248,25 @@ def generate_online(offline_util: float = 0.4, online_util: float = 1.6,
     deadline = arrival + t_star / u
     online = TaskSet(arrival, deadline, params, u)
     return off.concat(online)
+
+
+def peak_pair_estimate(task_set: TaskSet) -> int:
+    """Upper estimate of concurrently busy pairs: each task on its own pair
+    from its arrival slot until the later of its deadline and
+    ``ceil(a) + t*``, peak of the running sum.
+
+    A sizing heuristic, not a schedule: packing shares pairs and DRS holds
+    servers ``rho`` slots past their last task, so the real fleet is
+    usually smaller but the same order of magnitude.  Used to size
+    :class:`repro.core.faults.FaultTrace` server ranges (``peak / l``)
+    without running a failure-free schedule first."""
+    if len(task_set) == 0:
+        return 0
+    start = np.ceil(np.asarray(task_set.arrival, np.float64))
+    end = np.maximum(np.asarray(task_set.deadline, np.float64),
+                     start + task_set.t_star)
+    ts = np.concatenate([start, end])
+    delta = np.concatenate([np.ones(start.shape[0]),
+                            -np.ones(end.shape[0])])
+    order = np.lexsort((-delta, ts))       # at ties, starts count first
+    return int(np.cumsum(delta[order]).max())

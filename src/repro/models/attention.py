@@ -30,6 +30,17 @@ from repro.models.layers import COMPUTE_DTYPE, ParamBuilder, Params, apply_rope
 NEG_INF = -1e30
 DEFAULT_CHUNK = 1024
 
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                              # pinned 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False)
+
 
 def init_attention(b: ParamBuilder, cfg: ModelConfig, d_in: Optional[int] = None) -> Params:
     d = d_in or cfg.d_model
@@ -341,9 +352,9 @@ def decode_attention_sharded(q: jax.Array, k_cache: jax.Array,
         B, KV, g, dh = out.shape
         return out.reshape(B, KV * g, dh).astype(q.dtype)
 
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh, in_specs=(qspec, cspec, cspec, P()),
-        out_specs=qspec, check_vma=False,
+        out_specs=qspec,
     )(q, k_cache, v_cache, cache_len)
 
 
@@ -380,8 +391,8 @@ def cache_insert(cache: jax.Array, new: jax.Array, pos: jax.Array,
         base = jax.lax.axis_index(axis) * s_local
         return local_insert(c, n, base, s_local)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(cspec, nspec),
-                         out_specs=cspec, check_vma=False)(cache, new)
+    return _shard_map(body, mesh=mesh, in_specs=(cspec, nspec),
+                      out_specs=cspec)(cache, new)
 
 
 def init_decode_cache(cfg: ModelConfig, n_layers: int, batch: int,

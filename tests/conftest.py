@@ -10,3 +10,24 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.devices()
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _seed_global_rngs():
+    """Pin every global RNG before each test, so legacy ``np.random.*``
+    calls anywhere down the stack draw the same stream regardless of test
+    order or selection.  (JAX has no global RNG — ``jax.random`` takes
+    explicit keys, which tests construct from literal seeds.)"""
+    np.random.seed(0)
+    yield
+
+
+@pytest.fixture
+def rng() -> np.random.Generator:
+    """The per-test random source.  Tests take this fixture instead of
+    constructing ad-hoc ``np.random.default_rng(...)`` inline, so all
+    random test inputs are seeded in exactly one place."""
+    return np.random.default_rng(0)

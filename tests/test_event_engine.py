@@ -191,13 +191,13 @@ def test_settle_time_does_not_change_booking():
 # ---------------------------------------------------------------------------
 
 
-def test_fractional_arrivals_never_start_early(library):
+def test_fractional_arrivals_never_start_early(library, rng):
     """A task arriving at 3.7 is grouped at slot 4, not slot 3: no
     assignment may start before its arrival, and its DVFS window is
     d - ceil(a), not the wider d - floor(a)."""
     ts0 = tasks.generate_trace(60, pattern="uniform", horizon=50, seed=3,
                                library=library)
-    frac = np.random.default_rng(0).uniform(0.01, 0.99, len(ts0))
+    frac = rng.uniform(0.01, 0.99, len(ts0))
     ts = tasks.TaskSet(ts0.arrival - frac, ts0.deadline, ts0.params,
                        ts0.utilization)
     for placement in ("scalar", "vector"):

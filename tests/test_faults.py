@@ -1,0 +1,421 @@
+"""Fault-injection subsystem: failure traces, exact energy settlement at
+the crash instant, deadline-aware re-placement, and graceful degradation.
+
+Layers under test (see docs/ARCHITECTURE.md, fault-injection layer):
+
+* :class:`repro.core.faults.FaultTrace` — deterministic trace construction;
+* :class:`repro.core.engine.ClusterEngine.fail_pairs` /
+  ``revive_pairs`` — engine-level goldens with hand-derived energies;
+* :func:`repro.core.online.schedule_online(faults=...)` — end-to-end
+  goldens (hand-derived), scalar/vector bit-identity under injection, and
+  the graceful-degradation violation accounting;
+* property invariants under arbitrary random traces (seeded sweep always;
+  the same properties run under ``hypothesis`` when it is installed).
+
+Golden derivations are written out next to each golden test.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import faults, machines, online, tasks
+from repro.core.dvfs import DvfsParams
+from repro.core.engine import ClusterEngine
+from repro.core.faults import FaultEvent, FaultTrace
+from repro.core.tasks import TaskSet
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # container ships without hypothesis; CI installs it
+    HAVE_HYPOTHESIS = False
+
+# Paper constants used by the hand derivations below.
+P_IDLE, DELTA_ON, RHO = 37.0, 90.0, 2
+
+
+# ---------------------------------------------------------------------------
+# FaultTrace construction.
+# ---------------------------------------------------------------------------
+
+def test_trace_sorts_deterministically_fail_before_revive():
+    tr = FaultTrace.from_events(
+        [(5.0, 1, "revive"), (5.0, 0, "fail"), (2.0, 3, "fail"),
+         (5.0, 0, "revive")])
+    assert [(e.t, e.server, e.kind) for e in tr.events] == [
+        (2.0, 3, "fail"), (5.0, 0, "fail"),
+        (5.0, 0, "revive"), (5.0, 1, "revive")]
+    assert tr.n_failures == 2 and len(tr) == 4
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(1.0, 0, "explode")
+    with pytest.raises(ValueError):
+        FaultEvent(-1.0, 0, "fail")
+    with pytest.raises(ValueError):
+        FaultEvent(1.0, -2, "fail")
+    with pytest.raises(ValueError):
+        FaultTrace.sample(4, 10.0, mtbf=0.0)
+
+
+def test_trace_sample_replays_from_seed():
+    a = FaultTrace.sample(16, 200.0, mtbf=50.0, mttr=5.0, seed=9)
+    b = FaultTrace.sample(16, 200.0, mtbf=50.0, mttr=5.0, seed=9)
+    assert a.events == b.events
+    assert a.events != FaultTrace.sample(16, 200.0, mtbf=50.0, mttr=5.0,
+                                         seed=10).events
+    # alternation per server: fail/revive strictly interleave in time
+    by_srv = {}
+    for e in a.events:
+        by_srv.setdefault(e.server, []).append(e.kind)
+    for kinds in by_srv.values():
+        assert kinds[0] == "fail"
+        assert all(k1 != k2 for k1, k2 in zip(kinds, kinds[1:]))
+
+
+def test_trace_sample_per_class_mtbf():
+    """Per-slot mtbf array: a crash-happy slot fails more often."""
+    mtbf = np.array([5.0, 5000.0])
+    tr = FaultTrace.sample(2, 500.0, mtbf=mtbf, mttr=1.0, seed=0)
+    n0 = sum(1 for e in tr.events if e.server == 0 and e.kind == "fail")
+    n1 = sum(1 for e in tr.events if e.server == 1 and e.kind == "fail")
+    assert n0 > n1
+
+
+def test_trace_fraction_counts_and_repair():
+    tr = FaultTrace.fraction(200, 0.05, horizon=100.0, seed=1, repair=7.0)
+    assert tr.n_failures == 10
+    assert len(tr) == 20
+    fails = {e.server: e.t for e in tr.events if e.kind == "fail"}
+    for e in tr.events:
+        if e.kind == "revive":
+            assert e.t == pytest.approx(fails[e.server] + 7.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level goldens (hand-derived).
+# ---------------------------------------------------------------------------
+
+def test_engine_fail_books_energy_exactly_at_crash_l1():
+    """l=1: acquire at t=0, task [0, 10], crash at t=4.
+
+    on-span = 4 - 0 (hard crash: no rho drain tail), busy = 10 - 6 rollback
+    = 4, so e_idle = 37*(4 - 4) = 0 and e_overhead = 90*1.
+    """
+    eng = ClusterEngine(1, servers=True, rho=RHO)
+    pid = eng.acquire_pair(0.0)
+    eng.assign(pid, 0.0, 10.0)
+    eng.settle(4.0)
+    done = eng.fail_pairs(4.0, [pid], busy_rollback=[6.0])
+    assert done.tolist() == [pid]
+    assert eng.pair_failed[pid]
+    assert float(eng.busy[pid]) == 4.0
+    assert float(eng.mu[pid]) == 4.0
+    e_idle, e_overhead, n_servers = eng.finalize()
+    assert e_idle == 0.0
+    assert e_overhead == DELTA_ON
+    # repeated fail is a no-op
+    eng2 = ClusterEngine(1, servers=True, rho=RHO)
+    p2 = eng2.acquire_pair(0.0)
+    eng2.settle(4.0)
+    eng2.fail_pairs(4.0, [p2])
+    assert eng2.fail_pairs(5.0, [p2]).size == 0
+
+
+def test_engine_fail_books_energy_exactly_at_crash_l2():
+    """l=2: tasks [0,10] and [0,3] on the two pairs, crash at t=4.
+
+    busy = [10-6, 3-0] = [4, 3]; on-span = 4 for both pair slots, so
+    e_idle = 37*(4*2 - 7) = 37 and e_overhead = 90*2 (both pairs of the
+    one powered server).
+    """
+    eng = ClusterEngine(2, servers=True, rho=RHO)
+    base = eng.acquire_pair(0.0)
+    eng.assign(base, 0.0, 10.0)
+    eng.assign(base + 1, 0.0, 3.0)
+    eng.settle(4.0)
+    eng.fail_pairs(4.0, [base, base + 1], busy_rollback=[6.0, 0.0])
+    assert eng.busy.tolist() == [4.0, 3.0]
+    e_idle, e_overhead, _ = eng.finalize()
+    assert e_idle == pytest.approx(P_IDLE * 1.0)
+    assert e_overhead == pytest.approx(DELTA_ON * 2)
+
+
+def test_engine_failed_pairs_leave_every_selector_pool():
+    eng = ClusterEngine(1, servers=True, rho=RHO)
+    p0 = eng.acquire_pair(0.0)
+    p1 = eng.acquire_pair(0.0)
+    eng.fail_pairs(0.0, [p0])
+    assert not eng.eligible_mask()[p0]
+    assert eng.worst_fit() == p1
+    assert eng.first_fit(0.0, 100.0, 1.0) == p1
+    assert eng.best_fit(0.0, 100.0, 1.0) == p1
+    assert eng.pool_ids().tolist() == [p1]
+    # a failed-while-off server is not re-powered by acquire_pair
+    eng.settle(50.0)          # both servers power off
+    p2 = eng.acquire_pair(50.0)
+    assert p2 // eng.l != p0 // eng.l
+
+
+def test_engine_revive_floors_mu_and_rejoins_wake_pool():
+    eng = ClusterEngine(1, servers=True, rho=RHO)
+    p0 = eng.acquire_pair(0.0)
+    eng.assign(p0, 0.0, 10.0)
+    eng.settle(4.0)
+    eng.fail_pairs(4.0, [p0], busy_rollback=[6.0])
+    # revive while everything else is off: server rejoins the wake pool
+    # (no on-span is booked until a task actually wakes it)
+    assert eng.revive_pairs(20.0, [p0]).tolist() == [p0]
+    assert not eng.pair_failed[p0]
+    assert eng.revive_pairs(21.0, [p0]).size == 0      # no-op when healthy
+    p1 = eng.acquire_pair(25.0)
+    assert p1 == p0                                    # re-powered, not built
+    assert float(eng.mu[p0]) == 25.0
+
+
+def test_engine_settle_idempotent_around_failures():
+    eng = ClusterEngine(2, servers=True, rho=RHO)
+    base = eng.acquire_pair(0.0)
+    eng.assign(base, 0.0, 3.0)
+    eng.settle(4.0)
+    snap = (eng._on_time[: eng.n_servers].copy(),
+            eng._on[: eng.n_servers].copy())
+    eng.settle(4.0)
+    assert np.array_equal(snap[0], eng._on_time[: eng.n_servers])
+    eng.fail_pairs(4.0, [base, base + 1], busy_rollback=[0.0, 0.0])
+    snap = eng._on_time[: eng.n_servers].copy()
+    eng.settle(4.0)
+    eng.settle(4.0)
+    assert np.array_equal(snap, eng._on_time[: eng.n_servers])
+
+
+def test_engine_crash_at_drs_boundary_no_double_booking():
+    """Crash at EXACTLY mu_srv + rho, the DRS power-off instant: settle
+    books the off event first (span mu+rho), the crash then sees an OFF
+    server and books nothing more."""
+    eng = ClusterEngine(1, servers=True, rho=RHO)
+    pid = eng.acquire_pair(0.0)
+    eng.assign(pid, 0.0, 5.0)
+    eng.settle(5.0 + RHO)
+    eng.fail_pairs(5.0 + RHO, [pid], busy_rollback=[0.0])
+    e_idle, e_overhead, _ = eng.finalize()
+    assert e_idle == pytest.approx(P_IDLE * RHO)       # the rho drain tail
+    assert e_overhead == pytest.approx(DELTA_ON)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end goldens (hand-derived; no DVFS so every number is exact).
+# ---------------------------------------------------------------------------
+
+def _golden_task_set(n=2):
+    """Tasks at (1,1,1): t* = t0 + D, p* = p0 + gamma + c.
+
+    A: a=0, t*=10, p*=100, d=30;  B: a=1, t*=5, p*=200, d=40;
+    C (revive golden): a=25, t*=2, p*=100, d=30.
+    """
+    params = DvfsParams(
+        p0=np.array([30.0, 60.0, 30.0][:n]),
+        gamma=np.array([20.0, 40.0, 20.0][:n]),
+        c=np.array([50.0, 100.0, 50.0][:n]),
+        big_d=np.array([9.0, 4.0, 1.0][:n]),
+        delta=np.ones(n), t0=np.ones(n))
+    return TaskSet(arrival=np.array([0.0, 1.0, 25.0][:n]),
+                   deadline=np.array([30.0, 40.0, 30.0][:n]),
+                   params=params, utilization=np.full(n, 0.5))
+
+
+@pytest.mark.parametrize("placement", ["scalar", "vector"])
+def test_e2e_crash_golden(placement):
+    """l=1, EDL, no DVFS, fail server 0 at t=4.
+
+    Failure-free: A -> pair0 [0,10], B -> pair0 [10,15].  Crash at 4:
+    A truncated [0,4] (400 J wasted, billed), B tombstoned (0 J); both
+    re-place EDF onto fresh server 1: A [4,14], B [14,19].
+      e_run      = 100*4 + 100*10 + 200*5           = 2400
+      on-spans   = srv0: 4 (hard crash), srv1: 19+2-4 = 17
+      e_idle     = 37 * (21 - (4+10+5))             = 74
+      e_overhead = 90 * 2                           = 180
+      e_total                                       = 2654, 0 violations
+    """
+    r = online.schedule_online(
+        _golden_task_set(), l=1, algorithm="edl", use_dvfs=False,
+        placement=placement, bound=False,
+        faults=FaultTrace.from_events([(4.0, 0, "fail")]))
+    assert r.e_run == pytest.approx(2400.0)
+    assert r.e_idle == pytest.approx(74.0)
+    assert r.e_overhead == pytest.approx(180.0)
+    assert r.e_total == pytest.approx(2654.0)
+    assert r.violations == 0
+    assert r.fault_stats == {"failures": 1, "revivals": 0, "skipped": 0,
+                             "orphans": 2, "restarted": 2, "degraded": 0}
+    rows = [(a.task, a.pair, a.start, a.finish, a.energy, a.failed)
+            for a in r.assignments]
+    assert rows == [(0, 0, 0.0, 4.0, 400.0, True),     # truncated at crash
+                    (1, 0, 10.0, 10.0, 0.0, True),     # queued: tombstone
+                    (0, 1, 4.0, 14.0, 1000.0, False),
+                    (1, 1, 14.0, 19.0, 1000.0, False)]
+
+
+@pytest.mark.parametrize("placement", ["scalar", "vector"])
+def test_e2e_revive_golden(placement):
+    """Extends the crash golden: server 0 revives at t=20; task C arrives
+    at t=25 and must land on the REVIVED server 0 (server 1 powered off at
+    21 = 19 + rho).
+
+      e_run      = 2400 + 100*2                       = 2600
+      on-spans   = srv0: 4 + (27+2-25) = 8, srv1: 17  -> sum 25
+      e_idle     = 37 * (25 - (4+10+5+2))             = 148
+      e_overhead = 90 * 3   (srv0 on twice, srv1 once) = 270
+      e_total                                          = 3018, 0 violations
+    """
+    r = online.schedule_online(
+        _golden_task_set(3), l=1, algorithm="edl", use_dvfs=False,
+        placement=placement, bound=False,
+        faults=FaultTrace.from_events([(4.0, 0, "fail"), (20.0, 0,
+                                                          "revive")]))
+    assert r.e_run == pytest.approx(2600.0)
+    assert r.e_idle == pytest.approx(148.0)
+    assert r.e_overhead == pytest.approx(270.0)
+    assert r.e_total == pytest.approx(3018.0)
+    assert r.violations == 0
+    assert r.fault_stats["revivals"] == 1
+    c_rec = [a for a in r.assignments if a.task == 2]
+    assert len(c_rec) == 1 and c_rec[0].pair == 0      # revived server 0
+    assert (c_rec[0].start, c_rec[0].finish) == (25.0, 27.0)
+
+
+def test_e2e_degradation_counts_violation_never_crashes():
+    """Crash just before a long task finishes, deadline too close: no pair
+    (not even a fresh one) can rerun it in time, so the graceful-degradation
+    step books it at max speed and the miss is ONE violation.  (A crash at
+    EXACTLY the finish time would not orphan the task — a record with
+    ``finish <= t`` has completed; ``test_crash_exactly_at_arrival_slot_
+    boundary`` pins the other boundary.)"""
+    params = DvfsParams(p0=np.array([30.0]), gamma=np.array([20.0]),
+                        c=np.array([50.0]), big_d=np.array([9.0]),
+                        delta=np.array([1.0]), t0=np.array([1.0]))
+    ts = TaskSet(arrival=np.array([0.0]), deadline=np.array([11.0]),
+                 params=params, utilization=np.array([0.9]))
+    for placement in ("scalar", "vector"):
+        r = online.schedule_online(
+            ts, l=1, algorithm="edl", use_dvfs=False, placement=placement,
+            bound=False, faults=FaultTrace.from_events([(9.5, 0, "fail")]))
+        assert r.violations == 1
+        assert r.fault_stats["degraded"] == 1
+        live = [a for a in r.assignments if not a.failed]
+        assert len(live) == 1 and live[0].finish > 11.0
+
+
+def test_events_for_unbuilt_servers_are_skipped():
+    r = online.schedule_online(
+        _golden_task_set(), l=1, algorithm="edl", use_dvfs=False,
+        bound=False,
+        faults=FaultTrace.from_events([(4.0, 500, "fail"),
+                                       (6.0, 501, "revive")]))
+    assert r.fault_stats == {"failures": 0, "revivals": 0, "skipped": 2,
+                             "orphans": 0, "restarted": 0, "degraded": 0}
+    assert r.e_total == pytest.approx(
+        online.schedule_online(_golden_task_set(), l=1, algorithm="edl",
+                               use_dvfs=False, bound=False).e_total)
+
+
+def test_empty_trace_is_bit_identical_to_no_faults():
+    ts = tasks.generate_online(0.4, 1.6, seed=5, horizon=60)
+    r0 = online.schedule_online(ts, l=2, theta=0.9, bound=False)
+    r1 = online.schedule_online(ts, l=2, theta=0.9, bound=False,
+                                faults=FaultTrace.from_events([]))
+    assert r0.e_run == r1.e_run and r0.e_idle == r1.e_idle
+    assert r0.e_overhead == r1.e_overhead
+    assert r0.violations == r1.violations
+    assert r0.fault_stats is None
+    assert r1.fault_stats == {"failures": 0, "revivals": 0, "skipped": 0,
+                              "orphans": 0, "restarted": 0, "degraded": 0}
+    assert r1.assignments == r0.assignments
+
+
+# ---------------------------------------------------------------------------
+# Properties under arbitrary random traces.  Seeded sweep always runs; the
+# same checker runs under hypothesis when installed (CI installs it).
+# ---------------------------------------------------------------------------
+
+def check_fault_invariants(seed: int, algorithm: str = "edl",
+                           l: int = 2, classes=None):
+    """Energy-conservation and record invariants under a random trace, plus
+    scalar/vector bit-identity."""
+    rng = np.random.default_rng(seed)
+    ts = tasks.generate_online(0.3, float(rng.uniform(0.5, 1.5)),
+                               seed=seed, horizon=60)
+    trace = FaultTrace.sample(
+        int(rng.integers(4, 40)), 70.0,
+        mtbf=float(rng.uniform(10.0, 80.0)),
+        mttr=float(rng.uniform(2.0, 20.0)) if rng.random() < 0.7 else None,
+        seed=seed + 1)
+    theta = float(rng.choice([0.8, 0.9, 1.0]))
+    results = {}
+    for placement in ("scalar", "vector"):
+        r = online.schedule_online(
+            ts, l=l, theta=theta, algorithm=algorithm, placement=placement,
+            bound=False, classes=classes, faults=trace)
+        results[placement] = r
+        # Eq. 7 decomposition holds and every term is sane
+        assert r.e_idle >= -1e-9
+        assert r.e_overhead >= 0.0
+        assert r.e_total == pytest.approx(r.e_run + r.e_idle + r.e_overhead)
+        assert r.e_run == pytest.approx(
+            sum(a.energy for a in r.assignments))
+        live = {}
+        for a in r.assignments:
+            assert a.finish >= a.start - 1e-9          # no negative spans
+            assert a.energy >= -1e-9
+            if a.failed:
+                assert a.energy == pytest.approx(
+                    a.power * (a.finish - a.start))
+            else:
+                live[a.task] = live.get(a.task, 0) + 1
+        # every task keeps exactly one live record, however often it failed
+        assert len(live) == len(ts) and set(live.values()) == {1}
+    a, b = results["scalar"], results["vector"]
+    assert (a.e_run, a.e_idle, a.e_overhead, a.violations, a.n_pairs) == \
+           (b.e_run, b.e_idle, b.e_overhead, b.violations, b.n_pairs)
+    assert a.fault_stats == b.fault_stats
+    key = lambda z: (z.task, z.start, z.pair)
+    assert sorted(a.assignments, key=key) == sorted(b.assignments, key=key)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fault_invariants_edl(seed):
+    check_fault_invariants(seed, "edl")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fault_invariants_bin(seed):
+    check_fault_invariants(100 + seed, "bin")
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_fault_invariants_mixed_classes(seed):
+    check_fault_invariants(200 + seed, "edl",
+                           classes=("gtx-1080ti", "tpu-v5e"))
+
+
+def test_crash_exactly_at_arrival_slot_boundary():
+    """Events AT a slot time apply before the slot's group is placed: the
+    group can never land on the just-crashed server."""
+    ts = _golden_task_set()
+    r = online.schedule_online(
+        ts, l=1, algorithm="edl", use_dvfs=False, bound=False,
+        faults=FaultTrace.from_events([(1.0, 0, "fail")]))
+    srv0_live = [a for a in r.assignments
+                 if a.pair == 0 and not a.failed and a.start >= 1.0]
+    assert not srv0_live
+    assert r.violations == 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           algorithm=st.sampled_from(["edl", "bin"]),
+           l=st.sampled_from([1, 2, 4]))
+    def test_fault_invariants_hypothesis(seed, algorithm, l):
+        check_fault_invariants(seed, algorithm, l=l)

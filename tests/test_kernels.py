@@ -178,3 +178,97 @@ def test_dvfs_kernel_through_scheduler():
                                         use_kernel=True)
     assert r_ker.violations == 0
     assert r_ker.e_total == pytest.approx(r_ref.e_total, rel=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Differential fuzz: the hierarchical kernel vs the kernels/ref.py oracle on
+# random widened [n, 16] matrices — random params, random windows, random
+# readjust flags, and MIXED per-row interval boxes including a degenerate
+# (single-point) box.  The seeded sweep always runs; the same checker runs
+# under hypothesis when installed (CI installs it).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _fuzz_boxes(rng):
+    """A few random scaling boxes plus one degenerate single-point box
+    (v_min == v_max, fm_min == fm_max, fc pinned at g1(v_max))."""
+    from repro.core import dvfs
+
+    boxes = [dvfs.WIDE.bounds(), dvfs.NARROW.bounds()]
+    for _ in range(2):
+        v_min = float(rng.uniform(0.5, 0.9))
+        v_max = float(rng.uniform(v_min + 0.05, 1.24))
+        fm_min = float(rng.uniform(0.5, 0.9))
+        boxes.append((v_min, v_max, float(rng.uniform(0.5, 0.8)),
+                      fm_min, float(rng.uniform(fm_min + 0.05, 1.2))))
+    v = float(rng.uniform(0.7, 1.2))
+    fc = dvfs.g1_float(v)
+    boxes.append((v, v, fc, 1.0, 1.0))        # degenerate: one point
+    return boxes
+
+
+def check_kernel_matches_oracle_fuzz(seed: int, n: int = 64):
+    from repro.core import dvfs
+    from repro.core.dvfs import DvfsParams
+
+    rng = np.random.default_rng(seed)
+    p_star = rng.uniform(120, 260, n)
+    gamma = p_star * rng.uniform(0.05, 0.25, n)
+    p0 = p_star * rng.uniform(0.1, 0.5, n)
+    params = DvfsParams(p0=p0, gamma=gamma, c=p_star - gamma - p0,
+                        big_d=rng.uniform(1.0, 50.0, n),
+                        delta=rng.uniform(0.0, 1.0, n),
+                        t0=rng.uniform(0.05, 5.0, n))
+    boxes = _fuzz_boxes(rng)
+    bounds = np.asarray([boxes[i] for i in rng.integers(0, len(boxes), n)],
+                        np.float32)
+    tstar = np.asarray(params.default_time())
+    tmin = np.asarray([float(dvfs.min_time(params[i],
+                                           dvfs.ScalingInterval(*bounds[i])))
+                       for i in range(n)])
+    readj = (rng.random(n) < 0.3).astype(np.float32)
+    # windows span infeasible (below t_min) through slack (2 t*); readjust
+    # rows stay >= t_min (the boundary solve's contract: a bookable window)
+    lo = np.where(readj > 0.5, tmin, 0.5 * tmin)
+    allowed = lo + (2.0 * tstar - lo) * rng.random(n)
+    mat = np.stack([np.asarray(f, np.float32) for f in params.astuple()]
+                   + [allowed.astype(np.float32), readj], axis=1)
+    mat = np.concatenate([mat, bounds, np.zeros((n, 3), np.float32)], axis=1)
+    assert mat.shape == (n, 16)
+
+    got = ops.dvfs_solve_matrix(mat)
+    expect = ref.dvfs_solve_ref(mat)
+
+    e_got, e_exp = got[:, 5], expect[:, 5]
+    rel = np.abs(e_got - e_exp) / np.maximum(e_exp, 1e-9)
+    assert float(np.median(rel)) < 2e-3
+    assert float(np.mean(rel)) < 1e-2
+    assert float(np.mean((got[:, 6] > .5) == (expect[:, 6] > .5))) >= 0.9
+    # solutions stay inside their per-row box
+    for j, (lo_c, hi_c) in ((0, (8, 9)), (2, (11, 12))):   # v, fm
+        assert np.all(got[:, j] >= mat[:, lo_c] - 1e-4)
+        assert np.all(got[:, j] <= mat[:, hi_c] + 1e-4)
+    assert np.all(got[:, 1] >= mat[:, 10] - 1e-4)          # fc >= fc_min
+    # feasible deadline-prior rows respect their window (both sides)
+    for out in (got, expect):
+        ok = (out[:, 7] > .5) & (out[:, 6] > .5)
+        assert np.all(out[ok, 3] <= allowed[ok] * (1 + 1e-3))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_dvfs_kernel_fuzz_vs_oracle(seed):
+    check_kernel_matches_oracle_fuzz(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_dvfs_kernel_fuzz_vs_oracle_hypothesis(seed):
+        check_kernel_matches_oracle_fuzz(seed, n=32)

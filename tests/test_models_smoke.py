@@ -13,8 +13,7 @@ from repro.optim.adamw import AdamW
 from repro.train.trainer import init_state, make_train_step
 
 
-def make_batch(cfg, B=2, S=32):
-    rng = np.random.default_rng(0)
+def make_batch(cfg, rng, B=2, S=32):
     batch = {
         "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
                               jnp.int32),
@@ -31,11 +30,11 @@ def make_batch(cfg, B=2, S=32):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
-def test_forward_shapes_and_finite(arch):
+def test_forward_shapes_and_finite(arch, rng):
     cfg = get_config(arch).reduced()
     model = Model(cfg)
     params, axes = model.init(jax.random.key(0))
-    batch = make_batch(cfg)
+    batch = make_batch(cfg, rng)
     x, aux = model.forward(params, batch, remat=False)
     B, S = batch["tokens"].shape
     assert x.shape == (B, S, cfg.d_model)
@@ -52,13 +51,13 @@ def test_forward_shapes_and_finite(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
-def test_one_train_step(arch):
+def test_one_train_step(arch, rng):
     cfg = get_config(arch).reduced()
     model = Model(cfg)
     opt = AdamW(learning_rate=1e-3)
     state = init_state(model, opt, jax.random.key(1))
     step = make_train_step(model, opt, param_axes=model.param_axes())
-    batch = make_batch(cfg)
+    batch = make_batch(cfg, rng)
     new_state, metrics = step(state, batch)
     assert np.isfinite(float(metrics["loss"]))
     assert int(new_state.step) == 1

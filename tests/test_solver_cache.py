@@ -141,10 +141,9 @@ def test_cache_tags_namespace_entries():
     assert c.get("a", b"k") is not None
 
 
-def test_solve_rows_dedups_within_call():
+def test_solve_rows_dedups_within_call(rng):
     """solver_fn sees each unique row exactly once, scatter restores order;
     cache=None still dedups but persists nothing."""
-    rng = np.random.default_rng(3)
     base = rng.random((6, solver_cache.KEY_COLS)).astype(np.float32)
     keys = base[rng.integers(0, 6, size=64)]
     calls = []

@@ -71,8 +71,7 @@ def test_adamw_clipping_and_schedule():
     assert float(jnp.max(jnp.abs(new["w"]))) < 1.0  # clipped step
 
 
-def test_int8_compression_roundtrip_error_bounded():
-    rng = np.random.default_rng(0)
+def test_int8_compression_roundtrip_error_bounded(rng):
     x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
     q, s = compress_int8(x)
     assert q.dtype == jnp.int8
