@@ -40,8 +40,7 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from benchmarks.common import record
-from repro.core import bounds, cluster as cl
-from repro.core import machines, scheduling, tasks
+from repro.core import bounds, machines, scheduling, tasks
 
 ALGOS = ("edl", "edf-wf", "edf-bf", "lpt-ff")
 

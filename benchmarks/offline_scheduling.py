@@ -8,14 +8,12 @@ reproduces the paper's axes (100 groups, U_J up to 1.6) given the time.
 from __future__ import annotations
 
 import argparse
-import json
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
 from benchmarks.common import record
-from repro.core import cluster as cl
-from repro.core import scheduling, tasks
+from repro.core import cluster as cl, scheduling, tasks
 
 ALGOS = ("edl", "edf-bf", "edf-wf", "lpt-ff")
 

@@ -35,8 +35,7 @@ import time
 from typing import Dict, Optional
 
 from benchmarks.common import record
-from repro.core import bounds, cluster as cl
-from repro.core import online, tasks
+from repro.core import bounds, cluster as cl, online, tasks
 
 
 def run_one(n_tasks: int, pattern: str, l: int = 4, theta: float = 0.9,

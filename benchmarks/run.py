@@ -5,7 +5,6 @@ roofline deliverable.  Prints ``name,us_per_call,derived`` CSV rows.
 """
 
 import argparse
-import sys
 
 
 def main(argv=None):

@@ -34,14 +34,13 @@ import argparse
 import dataclasses
 import json
 import os
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
 from benchmarks.common import record
-from repro.core import cluster as cl
-from repro.core import (dvfs, machines, online, scheduling, single_task,
-                        solver_cache, tasks)
+from repro.core import (cluster as cl, dvfs, machines, online, scheduling,
+                        single_task, solver_cache, tasks)
 
 #: interval setting -> (ScalingInterval, app-library static-share range,
 #: paper anchor for the mean single-task saving)

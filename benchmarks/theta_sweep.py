@@ -15,8 +15,7 @@ from typing import Dict
 import numpy as np
 
 from benchmarks.common import record
-from repro.core import cluster as cl
-from repro.core import online, scheduling, solver_cache, tasks
+from repro.core import cluster as cl, online, scheduling, solver_cache, tasks
 
 THETAS = (0.8, 0.85, 0.9, 0.95, 1.0)
 

@@ -34,9 +34,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import cluster as cl
-from repro.core import dvfs, machines, single_task
+from repro.core import cluster as cl, dvfs, machines, single_task
 from repro.core.dvfs import ScalingInterval
+from repro.kernels import layout
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,12 +86,13 @@ def unconstrained_energies(params, classes, interval: ScalingInterval,
                 False, np.asarray(iv.bounds(), np.float32))
 
             def solve(km: np.ndarray, _iv=iv) -> np.ndarray:
-                p = dvfs.DvfsParams(*(km[:, i] for i in range(6)))
+                p = dvfs.DvfsParams(
+                    *(km[:, i] for i in range(layout.N_PARAMS)))
                 return solver_cache.solution_to_rows(
                     single_task.solve_unconstrained(p, _iv))
 
             rows = solver_cache.solve_rows(keys, solve, tag="jnp-unc")
-            out[k] = np.asarray(rows[:, 5], np.float64)[:n]
+            out[k] = np.asarray(rows[:, layout.SOL_E], np.float64)[:n]
         else:
             sol = single_task.solve_unconstrained(adapted, iv)
             out[k] = np.asarray(sol.energy, np.float64)[:n]

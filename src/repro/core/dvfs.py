@@ -93,8 +93,10 @@ class ScalingInterval:
 
     def bounds(self) -> tuple:
         """``(v_min, v_max, fc_min, fm_min, fm_max)`` — the per-row interval
-        columns 8-12 of the widened ``[n, 16]`` kernel task matrix (see
-        :mod:`repro.kernels.dvfs_opt`)."""
+        columns (``layout.BOUNDS_SLICE``, width ``layout.N_BOUNDS``) of the
+        widened ``[n, NCOL]`` kernel task matrix (see
+        :mod:`repro.kernels.layout`; not imported here — this module sits
+        below the kernel package in the layer DAG)."""
         return (self.v_min, self.v_max, self.fc_min, self.fm_min, self.fm_max)
 
     def clamp(self, v: Array, fc: Array, fm: Array):

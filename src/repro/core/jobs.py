@@ -23,7 +23,7 @@ is architecture-agnostic; only the fitted constants differ.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 

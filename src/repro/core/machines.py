@@ -28,8 +28,8 @@ homogeneous code path (pinned by ``tests/test_machines.py`` against the
 :func:`configure_classes` runs Algorithm 1 for every task **on every
 class**: with ``use_kernel=True`` all ``C x n`` solves go through ONE
 widened ``[C*n, 16]`` Pallas dispatch whose rows carry their own interval
-bounds (columns 8-12, see :mod:`repro.kernels.dvfs_opt`); otherwise one
-jitted batched solve per class.  The schedulers then pick, per task, the
+bounds (``layout.BOUNDS_SLICE``, see :mod:`repro.kernels.layout`); otherwise
+one jitted batched solve per class.  The schedulers then pick, per task, the
 min-energy *feasible* class first and fall back through the remaining
 classes in ascending energy order (see docs/EQUATIONS.md for the
 equation/algorithm map).
@@ -42,10 +42,10 @@ from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import cluster as cl
-from repro.core import dvfs, single_task
+from repro.core import cluster as cl, dvfs, single_task
 from repro.core.dvfs import DvfsParams, ScalingInterval
 from repro.core.single_task import TaskConfig
+from repro.kernels import layout
 
 _EPS = 1e-9
 INFEASIBLE_PENALTY = 1e30  # pushes infeasible classes behind feasible ones
@@ -218,7 +218,8 @@ def configure_classes(params: DvfsParams, allowed: np.ndarray,
                        for cols in zip(*(a.astuple() for a in adapted))))
     allowed_rep = np.tile(allowed, len(classes))
     interval_rows = np.concatenate(
-        [np.broadcast_to(np.asarray(iv.bounds(), np.float64), (n, 5))
+        [np.broadcast_to(np.asarray(iv.bounds(), np.float64),
+                         (n, layout.N_BOUNDS))
          for iv in ivs], axis=0)
     big, allowed_rep, interval_rows, _ = single_task.pad_pow2(
         big, allowed_rep, interval_rows)

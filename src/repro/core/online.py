@@ -68,8 +68,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core import bounds, cluster as cl
-from repro.core import dvfs, machines
+from repro.core import bounds, cluster as cl, dvfs, machines
 from repro.core.dvfs import ScalingInterval
 from repro.core.engine import ClusterEngine
 from repro.core.faults import FaultInjector, FaultTrace, make_degrade

@@ -64,8 +64,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import cluster as cl
-from repro.core import machines
+from repro.core import cluster as cl, machines
 from repro.core.engine import ClusterEngine
 from repro.core.single_task import TaskConfig
 

@@ -58,8 +58,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import bounds, cluster as cl
-from repro.core import dvfs, machines, single_task
+from repro.core import bounds, cluster as cl, dvfs, machines, single_task
 from repro.core.dvfs import ScalingInterval
 from repro.core.engine import ClusterEngine
 from repro.core.machines import MachineClass, resolve_classes

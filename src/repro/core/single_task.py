@@ -37,23 +37,12 @@ import numpy as np
 
 from repro.core import dvfs
 from repro.core.dvfs import DvfsParams, ScalingInterval
+from repro.kernels import layout
+from repro.kernels.layout import DvfsSolution  # noqa: F401  (re-export)
 
 INV_PHI = 0.6180339887498949  # 1/golden ratio
 GRID_POINTS = 65
 GOLDEN_ITERS = 40
-
-
-class DvfsSolution(NamedTuple):
-    """Optimal setting for a (batch of) task(s)."""
-
-    v: jnp.ndarray
-    fc: jnp.ndarray
-    fm: jnp.ndarray
-    time: jnp.ndarray
-    power: jnp.ndarray
-    energy: jnp.ndarray
-    deadline_prior: jnp.ndarray  # bool: was the deadline binding?
-    feasible: jnp.ndarray        # bool: can the deadline be met at all?
 
 
 # ---------------------------------------------------------------------------
@@ -352,8 +341,9 @@ def _dedup_solve(params: DvfsParams, allowed, interval: ScalingInterval,
     solver = solve_on_boundary if boundary else solve_with_deadline
 
     def solve(km: np.ndarray) -> np.ndarray:
-        p = DvfsParams(*(km[:, i] for i in range(6)))
-        return solver_cache.solution_to_rows(solver(p, km[:, 6], interval))
+        p = DvfsParams(*(km[:, i] for i in range(layout.N_PARAMS)))
+        return solver_cache.solution_to_rows(
+            solver(p, km[:, layout.ALLOWED], interval))
 
     rows = solver_cache.solve_rows(keys, solve,
                                    tag="jnp-bd" if boundary else "jnp-dl")

@@ -45,8 +45,8 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-KEY_COLS = 13  # task-matrix columns 0-12 (see module docstring)
-SOL_COLS = 8   # (v, fc, fm, t, p, e, deadline_prior, feasible)
+from repro.kernels import layout
+from repro.kernels.layout import DvfsSolution, KEY_COLS, SOL_COLS
 
 #: Pad the miss batch to a power of two (>= 8) so the jitted solvers
 #: compile O(log n) distinct shapes, not one per unique-row count.
@@ -122,7 +122,7 @@ def build_keys(param_cols: Sequence[np.ndarray], allowed: np.ndarray,
     flag = np.full(n, 1.0 if readjust else 0.0, np.float32)
     bounds = np.asarray(bounds, np.float32)
     if bounds.ndim == 1:
-        bounds = np.broadcast_to(bounds, (n, 5))
+        bounds = np.broadcast_to(bounds, (n, layout.N_BOUNDS))
     keys = np.concatenate(
         [np.stack(cols + [np.asarray(allowed, np.float32), flag], axis=1),
          bounds], axis=1)
@@ -191,11 +191,11 @@ def solution_to_rows(sol) -> np.ndarray:
     return np.stack([np.asarray(f, np.float32) for f in sol], axis=1)
 
 
-def rows_to_solution(rows: np.ndarray):
-    """Inverse of :func:`solution_to_rows` (imports lazily to avoid a
-    core.single_task <-> core.solver_cache cycle)."""
-    from repro.core.single_task import DvfsSolution
+def rows_to_solution(rows: np.ndarray) -> DvfsSolution:
+    """Inverse of :func:`solution_to_rows`."""
     return DvfsSolution(
-        v=rows[:, 0], fc=rows[:, 1], fm=rows[:, 2], time=rows[:, 3],
-        power=rows[:, 4], energy=rows[:, 5],
-        deadline_prior=rows[:, 6] > 0.5, feasible=rows[:, 7] > 0.5)
+        v=rows[:, layout.SOL_V], fc=rows[:, layout.SOL_FC],
+        fm=rows[:, layout.SOL_FM], time=rows[:, layout.SOL_T],
+        power=rows[:, layout.SOL_P], energy=rows[:, layout.SOL_E],
+        deadline_prior=rows[:, layout.SOL_DP] > 0.5,
+        feasible=rows[:, layout.SOL_FEASIBLE] > 0.5)

@@ -9,16 +9,17 @@ hierarchically refined frequency grid entirely in VMEM and reduces the
 argmin, fusing what would otherwise be a dozen HBM round-trips per task
 into one.
 
-Layout: tasks are a [n, 16] f32 matrix
-    (p0, γ, c, D, δ, t0, allowed, readjust,
-     v_min, v_max, fc_min, fm_min, fm_max, pad, pad, pad);
+Layout: tasks are a [n, NCOL=16] f32 matrix whose columns are declared
+once in :mod:`repro.kernels.layout`
+    (P0, GAMMA, C_COEF, BIG_D, DELTA, T0, ALLOWED, READJUST,
+     V_MIN, V_MAX, FC_MIN, FM_MIN, FM_MAX, pad, pad, pad);
 block = BT=128 tasks per VPU tile row.
-Columns 8-12 carry the row's own :class:`ScalingInterval` bounds, which is
-what lets one ``pallas_call`` solve a class-stacked ``[C*n, 16]`` matrix
-where every class block has a different DVFS box (see
-``repro.core.machines.configure_classes``).  The legacy ``[n, 8]`` layout
-(homogeneous interval) is widened on entry from the static ``interval``
-argument.
+The ``BOUNDS_SLICE`` columns carry the row's own :class:`ScalingInterval`
+bounds, which is what lets one ``pallas_call`` solve a class-stacked
+``[C*n, 16]`` matrix where every class block has a different DVFS box (see
+``repro.core.machines.configure_classes``).  The legacy
+``[n, LEGACY_NCOL=8]`` layout (homogeneous interval) is widened on entry
+from the static ``interval`` argument.
 
 Each of the two 1-D sweeps is **hierarchical** (``grid=(G0, G1)`` static
 args, default ``(64, 64)``): a coarse pass over ``G0`` equispaced points
@@ -53,10 +54,13 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.dvfs import G1_A, G1_B, G1_C, ScalingInterval, WIDE
+from repro.kernels.layout import (ALLOWED, BIG_D, C_COEF, DELTA, FC_MIN,
+                                  FM_MAX, FM_MIN, GAMMA, KEY_COLS,
+                                  LEGACY_NCOL, N_BOUNDS, NCOL, P0, READJUST,
+                                  SOL_COLS, T0, V_MAX, V_MIN, col)
 
 BT = 128   # tasks per block
 DEFAULT_GRID = (64, 64)  # (coarse, fine) sweep points; ~16x the old flat-128
-NCOL = 16  # task-matrix columns (6 params, allowed, readjust, 5 bounds, pad)
 INF = 1e30
 
 #: A benign, fully-feasible pad task: reference-ish constants on the WIDE
@@ -64,10 +68,10 @@ INF = 1e30
 #: energy-prior branch.  (The old ``jnp.ones`` pad encoded the degenerate
 #: box v_min=v_max=fc_min=fm_min=fm_max=1, which pushed every pad row
 #: through the INF-masked deadline-boundary sweep.)
-_PAD_ROW = np.asarray(
+PAD_ROW = np.asarray(
     [[1.0, 1.0, 1.0, 1.0, 0.5, 0.1, 1e6, 0.0, *WIDE.bounds(), 0.0, 0.0, 0.0]],
     np.float32)
-assert _PAD_ROW.shape == (1, NCOL)
+assert PAD_ROW.shape == (1, NCOL)
 
 
 def _g1(v):
@@ -104,15 +108,21 @@ def _hier_argmin(efn, rows, g0: int, g1: int):
     return jnp.where(e1_best <= e0_best, f1_best, f0_best)
 
 
+def _sq(x):
+    """``[BT, 1] -> [BT]`` squeeze (a shape op, not a schema column read)."""
+    return jnp.squeeze(x, axis=1)
+
+
 def _kernel(tasks_ref, out_ref, *, g0: int, g1: int):
-    t = tasks_ref[...].astype(jnp.float32)               # [BT, 16]
-    p0, gamma, cc = t[:, 0:1], t[:, 1:2], t[:, 2:3]
-    dd, delta, t0 = t[:, 3:4], t[:, 4:5], t[:, 5:6]
-    allowed = t[:, 6:7]
-    readjust = t[:, 7] > 0.5   # theta-readjustment rows: boundary binds
-    # Per-row scaling-interval bounds (columns 8-12), shape [BT, 1].
-    v_min, v_max = t[:, 8:9], t[:, 9:10]
-    fc_min, fm_min, fm_max = t[:, 10:11], t[:, 11:12], t[:, 12:13]
+    t = tasks_ref[...].astype(jnp.float32)               # [BT, NCOL]
+    p0, gamma, cc = t[:, col(P0)], t[:, col(GAMMA)], t[:, col(C_COEF)]
+    dd, delta, t0 = t[:, col(BIG_D)], t[:, col(DELTA)], t[:, col(T0)]
+    allowed = t[:, col(ALLOWED)]
+    readjust = t[:, READJUST] > 0.5  # theta-readjustment rows: boundary binds
+    # Per-row scaling-interval bounds, shape [BT, 1].
+    v_min, v_max = t[:, col(V_MIN)], t[:, col(V_MAX)]
+    fc_min, fm_min, fm_max = (t[:, col(FC_MIN)], t[:, col(FM_MIN)],
+                              t[:, col(FM_MAX)])
     rows = jnp.arange(BT)
 
     def energy_at(v, fc, fm):
@@ -139,7 +149,7 @@ def _kernel(tasks_ref, out_ref, *, g0: int, g1: int):
 
     fu = _hier_argmin(lambda f: unc_at(f)[0], rows, g0, g1)
     _, (v_1, fc_1, fm_1, t_1) = unc_at(fu[:, None])      # [BT, 1] at winner
-    v_u, fc_u, fm_u, t_un = v_1[:, 0], fc_1[:, 0], fm_1[:, 0], t_1[:, 0]
+    v_u, fc_u, fm_u, t_un = _sq(v_1), _sq(fc_1), _sq(fm_1), _sq(t_1)
 
     # ---- sweep 2: deadline boundary t(fc, fm) = allowed, fm grid.
     def bnd_at(frac):
@@ -158,18 +168,19 @@ def _kernel(tasks_ref, out_ref, *, g0: int, g1: int):
 
     fb = _hier_argmin(lambda f: bnd_at(f)[0], rows, g0, g1)
     _, (v_2, fc_2, fm_2) = bnd_at(fb[:, None])
-    v_d, fc_d, fm_d = v_2[:, 0], fc_2[:, 0], fm_2[:, 0]
+    v_d, fc_d, fm_d = _sq(v_2), _sq(fc_2), _sq(fm_2)
 
     # ---- decision rule (== solve_with_deadline / solve_on_boundary):
     # energy-prior if the unconstrained optimum meets the deadline;
     # readjust rows shrank their window below the optimum, so the boundary
     # binds by construction; infeasible (deadline < t_min) -> max speed.
-    energy_prior = (t_un <= allowed[:, 0] + 1e-6) & ~readjust
-    t_min = (dd * (delta / fc_max + (1.0 - delta) / fm_max) + t0)[:, 0]
-    feasible = allowed[:, 0] >= t_min - 1e-6
-    v_mx = v_max[:, 0]
-    fc_mx = fc_max[:, 0]
-    fm_mx = fm_max[:, 0]
+    allowed1 = _sq(allowed)
+    energy_prior = (t_un <= allowed1 + 1e-6) & ~readjust
+    t_min = _sq(dd * (delta / fc_max + (1.0 - delta) / fm_max) + t0)
+    feasible = allowed1 >= t_min - 1e-6
+    v_mx = _sq(v_max)
+    fc_mx = _sq(fc_max)
+    fm_mx = _sq(fm_max)
 
     def pick(unc, con, mx):
         x = jnp.where(energy_prior, unc, con)
@@ -178,13 +189,14 @@ def _kernel(tasks_ref, out_ref, *, g0: int, g1: int):
     vf = pick(v_u, v_d, v_mx)
     fcf = pick(fc_u, fc_d, fc_mx)
     fmf = pick(fm_u, fm_d, fm_mx)
-    pw = (p0[:, 0] + gamma[:, 0] * fmf + cc[:, 0] * jnp.square(vf) * fcf)
-    tt = dd[:, 0] * (delta[:, 0] / fcf + (1.0 - delta[:, 0]) / fmf) + t0[:, 0]
-    tt = jnp.where(feasible & ~energy_prior, jnp.minimum(tt, allowed[:, 0]), tt)
+    pw = _sq(p0) + _sq(gamma) * fmf + _sq(cc) * jnp.square(vf) * fcf
+    tt = _sq(dd) * (_sq(delta) / fcf + (1.0 - _sq(delta)) / fmf) + _sq(t0)
+    tt = jnp.where(feasible & ~energy_prior, jnp.minimum(tt, allowed1), tt)
 
+    # [BT, SOL_COLS] in layout.SOL_* column order.
     out = jnp.stack([vf, fcf, fmf, tt, pw, pw * tt,
                      (~energy_prior).astype(jnp.float32),
-                     feasible.astype(jnp.float32)], axis=1)   # [BT, 8]
+                     feasible.astype(jnp.float32)], axis=1)
     out_ref[...] = out.astype(out_ref.dtype)
 
 
@@ -206,25 +218,25 @@ def dvfs_solve_kernel(tasks: jax.Array, *, interval: ScalingInterval = WIDE,
     if g0 < 2 or g1 < 2:
         raise ValueError(f"grid sizes must be >= 2, got {grid}")
     n = tasks.shape[0]
-    if tasks.shape[1] == 8:
+    if tasks.shape[1] == LEGACY_NCOL:
         bounds = jnp.broadcast_to(
-            jnp.asarray(interval.bounds(), tasks.dtype), (n, 5))
-        pad = jnp.zeros((n, NCOL - 8 - 5), tasks.dtype)
+            jnp.asarray(interval.bounds(), tasks.dtype), (n, N_BOUNDS))
+        pad = jnp.zeros((n, NCOL - KEY_COLS), tasks.dtype)
         tasks = jnp.concatenate([tasks, bounds, pad], axis=1)
     elif tasks.shape[1] != NCOL:
-        raise ValueError(f"task matrix must have 8 or {NCOL} columns, "
-                         f"got {tasks.shape[1]}")
+        raise ValueError(f"task matrix must have {LEGACY_NCOL} or {NCOL} "
+                         f"columns, got {tasks.shape[1]}")
     n_pad = -(-n // BT) * BT
     if n_pad != n:
-        pad = jnp.broadcast_to(jnp.asarray(_PAD_ROW, tasks.dtype),
+        pad = jnp.broadcast_to(jnp.asarray(PAD_ROW, tasks.dtype),
                                (n_pad - n, NCOL))
         tasks = jnp.concatenate([tasks, pad], axis=0)
     out = pl.pallas_call(
         functools.partial(_kernel, g0=g0, g1=g1),
         grid=(n_pad // BT,),
         in_specs=[pl.BlockSpec((BT, NCOL), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((BT, 8), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, 8), jnp.float32),
+        out_specs=pl.BlockSpec((BT, SOL_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, SOL_COLS), jnp.float32),
         interpret=interpret,
     )(tasks.astype(jnp.float32))
     return out[:n]

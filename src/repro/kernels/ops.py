@@ -15,10 +15,10 @@ import numpy as np
 
 from repro.core import solver_cache
 from repro.core.dvfs import DvfsParams, ScalingInterval, WIDE
-from repro.core.single_task import DvfsSolution
-from repro.kernels.dvfs_opt import (BT, DEFAULT_GRID, NCOL, _PAD_ROW,
-                                    dvfs_solve_kernel)
+from repro.kernels import layout
+from repro.kernels.dvfs_opt import BT, DEFAULT_GRID, PAD_ROW, dvfs_solve_kernel
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.layout import DvfsSolution
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
 #: Below this row count a multi-device split costs more in transfer/dispatch
@@ -84,9 +84,9 @@ def dvfs_solve_matrix(mat: np.ndarray, *, grid: tuple = DEFAULT_GRID,
     if interpret is None:
         interpret = default_interpret()
     mat = np.asarray(mat, np.float32)
-    if mat.shape[1] == solver_cache.KEY_COLS:  # widen key layout -> 16 cols
+    if mat.shape[1] == layout.KEY_COLS:  # widen key layout -> NCOL
         mat = np.concatenate(
-            [mat, np.zeros((mat.shape[0], NCOL - solver_cache.KEY_COLS),
+            [mat, np.zeros((mat.shape[0], layout.NCOL - layout.KEY_COLS),
                            np.float32)], axis=1)
     m = mat.shape[0]
     devs = jax.local_devices()
@@ -101,7 +101,7 @@ def dvfs_solve_matrix(mat: np.ndarray, *, grid: tuple = DEFAULT_GRID,
     per_dev = -(-m // nd)
     chunk = -(-per_dev // BT) * BT  # whole kernel blocks per device
     if nd * chunk != m:
-        pad = np.broadcast_to(_PAD_ROW, (nd * chunk - m, NCOL))
+        pad = np.broadcast_to(PAD_ROW, (nd * chunk - m, layout.NCOL))
         mat = np.concatenate([mat, pad], axis=0)
     parts = [dvfs_solve_kernel(
                  jax.device_put(jnp.asarray(mat[i * chunk:(i + 1) * chunk]),
@@ -143,8 +143,9 @@ def dvfs_solve(params: DvfsParams, allowed: np.ndarray,
     n = cols[0].shape[0]
     if interval_rows is not None:
         bounds = np.asarray(interval_rows, np.float32)
-        if bounds.shape != (n, 5):
-            raise ValueError(f"interval_rows must be [n, 5], got {bounds.shape}")
+        if bounds.shape != (n, layout.N_BOUNDS):
+            raise ValueError(f"interval_rows must be [n, {layout.N_BOUNDS}], "
+                             f"got {bounds.shape}")
     else:
         bounds = np.asarray(interval.bounds(), np.float32)
     keys = solver_cache.build_keys(cols, allowed, readjust, bounds)

@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.core import single_task
 from repro.core.dvfs import DvfsParams, ScalingInterval, WIDE
+from repro.kernels import layout as L
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -52,29 +53,31 @@ def dvfs_solve_ref(tasks: np.ndarray,
     deadline-boundary solve (``solve_on_boundary``), matching the kernel's
     readjust sweep.
 
-    A widened ``[n, 16]`` matrix (columns 8-12 = per-row interval bounds,
-    the heterogeneous-class layout) is solved by grouping rows that share
-    a scaling box and running the production solver once per group —
-    exactly the semantics of the kernel's per-row bounds."""
-    if tasks.shape[1] >= 13:
-        bounds = np.asarray(tasks[:, 8:13], np.float32)
-        out = np.zeros((tasks.shape[0], 8), np.float32)
+    A widened ``[n, 16]`` matrix (``layout.BOUNDS_SLICE`` = per-row
+    interval bounds, the heterogeneous-class layout) is solved by grouping
+    rows that share a scaling box and running the production solver once
+    per group — exactly the semantics of the kernel's per-row bounds."""
+    if tasks.shape[1] >= L.KEY_COLS:
+        bounds = np.asarray(tasks[:, L.BOUNDS_SLICE], np.float32)
+        out = np.zeros((tasks.shape[0], L.SOL_COLS), np.float32)
         for row in np.unique(bounds, axis=0):
             m = np.all(bounds == row, axis=1)
             iv = ScalingInterval(*(float(x) for x in row))
-            out[m] = dvfs_solve_ref(tasks[m, :8], iv)
+            out[m] = dvfs_solve_ref(tasks[m, :L.LEGACY_NCOL], iv)
         return out
-    params = DvfsParams(p0=tasks[:, 0], gamma=tasks[:, 1], c=tasks[:, 2],
-                        big_d=tasks[:, 3], delta=tasks[:, 4], t0=tasks[:, 5])
-    sol = single_task.solve_with_deadline(params, tasks[:, 6], interval)
-    readj = tasks[:, 7] > 0.5
+    params = DvfsParams(p0=tasks[:, L.P0], gamma=tasks[:, L.GAMMA],
+                        c=tasks[:, L.C_COEF], big_d=tasks[:, L.BIG_D],
+                        delta=tasks[:, L.DELTA], t0=tasks[:, L.T0])
+    allowed = tasks[:, L.ALLOWED]
+    sol = single_task.solve_with_deadline(params, allowed, interval)
+    readj = tasks[:, L.READJUST] > 0.5
     if np.any(readj):
-        bnd = single_task.solve_on_boundary(params, tasks[:, 6], interval)
+        bnd = single_task.solve_on_boundary(params, allowed, interval)
         sol = type(sol)(*(jnp.where(readj, b, s) for s, b in zip(sol, bnd)))
     t = np.asarray(sol.time)
     dp = np.asarray(sol.deadline_prior)
     feas = np.asarray(sol.feasible)
-    t = np.where(dp & feas, np.minimum(t, tasks[:, 6]), t)
+    t = np.where(dp & feas, np.minimum(t, allowed), t)
     p = np.asarray(sol.power)
     return np.stack([np.asarray(sol.v), np.asarray(sol.fc),
                      np.asarray(sol.fm), t, p, p * t,

@@ -39,15 +39,13 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import partition
 from repro.configs import registry
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import Model
 from repro.optim.adamw import AdamW, cosine_schedule
-from repro.train.trainer import (TrainState, init_state, make_state_axes,
-                                 make_train_step)
+from repro.train.trainer import init_state, make_state_axes, make_train_step
 
 HBM_BYTES = 16 * 2**30          # v5e-class: 16 GiB per chip
 ACT_BUDGET = 6 * 2**30          # live-activation napkin budget for microbatching

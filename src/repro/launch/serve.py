@@ -16,7 +16,7 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp

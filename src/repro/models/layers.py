@@ -9,7 +9,6 @@ code is pure functions over the params dict - vmappable, scannable, and
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

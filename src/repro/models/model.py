@@ -30,10 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import partition
-from repro.models import attention as attn_lib
-from repro.models import moe as moe_lib
-from repro.models import rglru as rglru_lib
-from repro.models import ssm as ssm_lib
+from repro.models import (attention as attn_lib, moe as moe_lib,
+                          rglru as rglru_lib, ssm as ssm_lib)
 from repro.models.config import ModelConfig
 from repro.models.layers import (COMPUTE_DTYPE, ParamBuilder, Params,
                                  embed_lookup, init_mlp, layer_norm, mlp,

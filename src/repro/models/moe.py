@@ -19,7 +19,7 @@ and router z-loss, returned for the trainer to weigh in.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,12 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 import time
 from typing import Any, Callable, Dict, Optional
-
-import jax
-import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
 

@@ -10,8 +10,7 @@ live activations to one microbatch x one layer.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

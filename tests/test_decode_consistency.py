@@ -3,7 +3,6 @@ architecture family, including ring-buffer (sliding-window) wraparound."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config

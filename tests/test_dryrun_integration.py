@@ -2,7 +2,6 @@
 subprocesses with forced host-device counts (so this pytest process keeps
 its single default device)."""
 
-import json
 import os
 import subprocess
 import sys

@@ -11,8 +11,7 @@ and the bit-identity of the scalar and vectorized placement paths.
 import numpy as np
 import pytest
 
-from repro.core import cluster as cl
-from repro.core import machines, online, scheduling, single_task, tasks
+from repro.core import cluster as cl, machines, online, scheduling, single_task, tasks
 from repro.core.dvfs import DvfsParams
 from repro.core.engine import ClusterEngine
 

@@ -18,7 +18,7 @@ Golden derivations are written out next to each golden test.
 import numpy as np
 import pytest
 
-from repro.core import faults, machines, online, tasks
+from repro.core import online, tasks
 from repro.core.dvfs import DvfsParams
 from repro.core.engine import ClusterEngine
 from repro.core.faults import FaultEvent, FaultTrace
@@ -379,7 +379,10 @@ def check_fault_invariants(seed: int, algorithm: str = "edl",
     assert (a.e_run, a.e_idle, a.e_overhead, a.violations, a.n_pairs) == \
            (b.e_run, b.e_idle, b.e_overhead, b.violations, b.n_pairs)
     assert a.fault_stats == b.fault_stats
-    key = lambda z: (z.task, z.start, z.pair)
+
+    def key(z):
+        return (z.task, z.start, z.pair)
+
     assert sorted(a.assignments, key=key) == sorted(b.assignments, key=key)
 
 

@@ -6,10 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models import attention as attn_lib
-from repro.models import moe as moe_lib
-from repro.models import rglru as rglru_lib
-from repro.models import ssm as ssm_lib
+from repro.models import attention as attn_lib, moe as moe_lib, rglru as rglru_lib, ssm as ssm_lib
 from repro.models.config import ModelConfig
 from repro.models.layers import ParamBuilder
 from repro.models.model import chunked_cross_entropy

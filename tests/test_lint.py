@@ -1,0 +1,285 @@
+"""repro-lint (tools/lint): pass/fail fixtures per rule family, the
+suppression mechanism, the layer-DAG data, and a self-check that the repo
+itself lints clean.
+
+Every rule family gets at least one fixture that MUST fail and one that
+MUST pass, so a rule that silently stops firing (or starts flagging idiom
+the repo depends on) breaks this gate, not a future refactor.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from tools.lint import layer_dag, lint_source
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def findings(src, module, select=None):
+    return lint_source(src, module=module, select=select)
+
+
+def rules_of(fs):
+    return {f.rule for f in fs}
+
+
+# ---------------------------------------------------------------------------
+# layer-contract
+# ---------------------------------------------------------------------------
+
+
+def test_layer_contract_flags_up_layer_import():
+    fs = findings("from repro.core import scheduling\n",
+                  module="repro.kernels.dvfs_opt")
+    assert rules_of(fs) == {"layer-contract"}
+    assert "UP-layer" in fs[0].message
+
+
+def test_layer_contract_flags_lazy_up_layer_import():
+    src = ("def f():\n"
+           "    from repro.core.placement import PlacementContext\n")
+    fs = findings(src, module="repro.core.engine")
+    assert rules_of(fs) == {"layer-contract"}
+
+
+def test_layer_contract_allows_same_and_down_layer():
+    src = ("from repro.core import bounds\n"           # same layer
+           "from repro.core.engine import ClusterEngine\n"  # deeper
+           "from repro.core.dvfs import DvfsParams\n"  # shared leaf
+           "from repro.kernels import layout\n")       # shared leaf
+    assert findings(src, module="repro.core.scheduling") == []
+
+
+def test_layer_contract_flags_out_of_dag_module():
+    fs = findings("from repro.models.ssm import ssd_reference\n",
+                  module="repro.core.engine")
+    assert rules_of(fs) == {"layer-contract"}
+    assert "outside the scheduler-stack DAG" in fs[0].message
+
+
+def test_layer_contract_allows_documented_extra_edge():
+    # kernels/ref.py -> models/ssm.py is a documented EXTRA_EDGES entry.
+    assert findings("from repro.models.ssm import ssd_reference\n",
+                    module="repro.kernels.ref") == []
+
+
+def test_layer_contract_shared_leaf_imports_only_shared():
+    assert findings("from repro.core.dvfs import DvfsParams\n",
+                    module="repro.core.tasks") == []
+    fs = findings("from repro.core import engine\n",
+                  module="repro.core.tasks")
+    assert rules_of(fs) == {"layer-contract"}
+    assert "shared leaf" in fs[0].message
+
+
+def test_layer_contract_flags_private_name_import():
+    fs = findings("from repro.kernels.dvfs_opt import _PAD_ROW\n",
+                  module="repro.core.solver_cache")
+    assert any("private name" in f.message for f in fs)
+
+
+def test_layer_dag_matches_repo_modules():
+    """Every ranked/shared module in the DAG data actually exists."""
+    for mod in list(layer_dag.RANK) + sorted(layer_dag.SHARED):
+        rel = mod.replace(".", "/") + ".py"
+        assert os.path.exists(os.path.join(REPO, "src", rel)), mod
+
+
+# ---------------------------------------------------------------------------
+# matrix-schema
+# ---------------------------------------------------------------------------
+
+
+def test_matrix_schema_flags_raw_column_index():
+    fs = findings("e = rows[:, 5]\n", module="repro.core.bounds")
+    assert rules_of(fs) == {"matrix-schema"}
+
+
+def test_matrix_schema_flags_raw_column_slice():
+    fs = findings("b = tasks[:, 8:13]\n", module="repro.kernels.ref")
+    assert rules_of(fs) == {"matrix-schema"}
+
+
+def test_matrix_schema_allows_named_columns_and_variables():
+    src = ("from repro.kernels import layout\n"
+           "e = rows[:, layout.SOL_E]\n"
+           "p = km[:, i]\n"
+           "x = t[:, None]\n"
+           "w = mat.shape[1]\n")
+    assert findings(src, module="repro.core.solver_cache",
+                    select=["matrix-schema"]) == []
+
+
+def test_matrix_schema_out_of_scope_module_not_flagged():
+    # models code indexes its own tensors freely.
+    assert findings("y = x[:, 0]\n", module="repro.models.model") == []
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+def test_determinism_flags_legacy_global_rng():
+    fs = findings("import numpy as np\nx = np.random.rand(4)\n",
+                  module="repro.core.tasks")
+    assert rules_of(fs) == {"determinism"}
+
+
+def test_determinism_flags_unseeded_default_rng():
+    fs = findings("import numpy as np\nr = np.random.default_rng()\n",
+                  module="repro.core.faults")
+    assert rules_of(fs) == {"determinism"}
+    assert "without a seed" in fs[0].message
+
+
+def test_determinism_allows_seeded_generator():
+    assert findings("import numpy as np\nr = np.random.default_rng(7)\n",
+                    module="repro.core.faults") == []
+
+
+def test_determinism_flags_stdlib_random():
+    fs = findings("import random\nx = random.random()\n",
+                  module="repro.core.jobs")
+    assert rules_of(fs) == {"determinism"}
+
+
+def test_determinism_flags_wall_clock_in_core():
+    fs = findings("import time\nt = time.time()\n",
+                  module="repro.core.engine")
+    assert rules_of(fs) == {"determinism"}
+
+
+def test_determinism_wall_clock_ok_outside_core_and_kernels():
+    # launch/train instrumentation may read the clock.
+    assert findings("import time\nt = time.time()\n",
+                    module="repro.launch.run") == []
+
+
+def test_determinism_flags_mutable_default_in_core():
+    fs = findings("def f(x=[]):\n    return x\n",
+                  module="repro.core.placement")
+    assert rules_of(fs) == {"determinism"}
+
+
+def test_determinism_flags_traced_float_and_if_in_kernel_body():
+    src = ("def _kernel(t_ref, o_ref):\n"
+           "    t = t_ref[...]\n"
+           "    a = t * 2.0\n"
+           "    if a.sum() > 0:\n"
+           "        pass\n"
+           "    y = float(a)\n"
+           "    z = a.item()\n")
+    fs = findings(src, module="repro.kernels.dvfs_opt",
+                  select=["determinism"])
+    msgs = " | ".join(f.message for f in fs)
+    assert "control flow on a traced value" in msgs
+    assert "float() on a traced value" in msgs
+    assert ".item() on a traced value" in msgs
+
+
+def test_determinism_static_conditional_in_kernel_body_ok():
+    src = ("def _kernel(t_ref, o_ref, *, causal=True):\n"
+           "    t = t_ref[...]\n"
+           "    if causal:\n"
+           "        t = t + 1.0\n"
+           "    o_ref[...] = t\n")
+    assert findings(src, module="repro.kernels.flash_attention",
+                    select=["determinism"]) == []
+
+
+# ---------------------------------------------------------------------------
+# dtype-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_dtype_flags_dtypeless_constructor_in_kernels():
+    fs = findings("import jax.numpy as jnp\nz = jnp.zeros((4, 4))\n",
+                  module="repro.kernels.ops")
+    assert rules_of(fs) == {"dtype-discipline"}
+
+
+def test_dtype_flags_float64_in_kernels():
+    fs = findings("import jax.numpy as jnp\n"
+                  "z = jnp.zeros((4,), jnp.float64)\n",
+                  module="repro.kernels.dvfs_opt")
+    assert rules_of(fs) == {"dtype-discipline"}
+
+
+def test_dtype_allows_explicit_f32_and_like_constructors():
+    src = ("import jax.numpy as jnp\n"
+           "a = jnp.zeros((4,), jnp.float32)\n"
+           "b = jnp.full((4,), 0.5, dtype=jnp.float32)\n"
+           "c = jnp.zeros_like(a)\n"
+           "d = jnp.asarray(a)\n")
+    assert findings(src, module="repro.kernels.ops",
+                    select=["dtype-discipline"]) == []
+
+
+def test_dtype_out_of_scope_in_core():
+    assert findings("import numpy as np\nz = np.zeros((4, 4))\n",
+                    module="repro.core.engine") == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions and runner
+# ---------------------------------------------------------------------------
+
+
+def test_inline_suppression_silences_named_rule_only():
+    line = "e = rows[:, 5]  # lint: disable=matrix-schema\n"
+    assert findings(line, module="repro.core.bounds") == []
+    # A different rule name does NOT suppress it.
+    other = "e = rows[:, 5]  # lint: disable=determinism\n"
+    assert rules_of(findings(other, module="repro.core.bounds")) == \
+        {"matrix-schema"}
+
+
+def test_suppression_disable_all():
+    line = "e = rows[:, 5]  # lint: disable=all\n"
+    assert findings(line, module="repro.core.bounds") == []
+
+
+def test_select_limits_rule_families():
+    src = "import numpy as np\nx = np.random.rand(4)\ne = rows[:, 5]\n"
+    only_schema = findings(src, module="repro.core.bounds",
+                           select=["matrix-schema"])
+    assert rules_of(only_schema) == {"matrix-schema"}
+
+
+def test_syntax_error_reported_as_parse_finding():
+    fs = lint_source("def broken(:\n", path="x.py")
+    assert fs and fs[0].rule == "parse"
+
+
+@pytest.mark.parametrize("extra", [[], ["--json"]])
+def test_repo_lints_clean_via_module_runner(extra):
+    """`python -m tools.lint` exits 0 on the repo (the CI gate)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.lint", *extra],
+        cwd=REPO, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    if extra:
+        assert json.loads(proc.stdout) == []
+
+
+def test_runner_rejects_unknown_rule():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.lint", "--select", "no-such-rule"],
+        cwd=REPO, capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 2
+    assert "unknown rule" in proc.stderr
+
+
+def test_runner_lists_rules():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.lint", "--list-rules"],
+        cwd=REPO, capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0
+    listed = set(proc.stdout.split())
+    assert listed == {"layer-contract", "matrix-schema", "determinism",
+                      "dtype-discipline"}

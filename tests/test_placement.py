@@ -16,8 +16,7 @@ online simulator uses.  These tests pin
 import numpy as np
 import pytest
 
-from repro.core import bounds, cluster as cl
-from repro.core import machines, online, placement, scheduling, tasks
+from repro.core import bounds, cluster as cl, machines, online, scheduling, tasks
 
 
 @pytest.fixture(scope="module")
@@ -107,19 +106,10 @@ def test_offline_energies_unchanged_to_1e9(alg, library):
     assert r.e_total == pytest.approx(OFFLINE_GOLDEN[alg][0], rel=1e-6)
 
 
-# ---------------------------------------------------------------------------
-# online.py owns no placement internals anymore.
-# ---------------------------------------------------------------------------
-
-
-def test_online_placement_internals_live_in_placement_module():
-    """The online driver must import its placement machinery from
-    core/placement.py instead of defining it (the PR-3 private helpers)."""
-    for name in ("_edl_place_group_vector", "_bin_place_group_vector",
-                 "_place_group_scalar", "_binpack_offline",
-                 "_edl_precompute"):
-        assert not hasattr(online, name), name
-    assert online.PlacementContext is placement.PlacementContext
+# The old hasattr-based meta test ("online.py owns no placement internals")
+# is retired: the layer-contract lint rule (tools/lint, backed by
+# tools/lint/layer_dag.py) now enforces the import DAG for every module,
+# not just this one edge — tests/test_lint.py covers it.
 
 
 # ---------------------------------------------------------------------------

@@ -3,8 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import cluster as cl
-from repro.core import dvfs, scheduling, single_task, tasks
+from repro.core import cluster as cl, scheduling, tasks
 from repro.core.dvfs import DvfsParams
 from repro.core.tasks import TaskSet
 

@@ -3,8 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import cluster as cl
-from repro.core import online, tasks
+from repro.core import cluster as cl, online, tasks
 
 
 def small_online(seed=0):

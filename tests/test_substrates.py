@@ -10,7 +10,7 @@ import pytest
 
 from repro.checkpoint.store import CheckpointStore
 from repro.data.pipeline import SyntheticLMData
-from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.optim.adamw import AdamW, cosine_schedule
 from repro.optim.compression import compress_int8, decompress_int8
 from repro.train.loop import LoopConfig, run_loop
 

@@ -2,13 +2,9 @@
 server grouping) reproduces the headline numbers, and the LM framework
 trains/serves through the same public API the examples use."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import cluster as cl
-from repro.core import online, scheduling, single_task, tasks
+from repro.core import cluster as cl, online, scheduling, tasks
 
 
 def test_offline_pipeline_headline_savings():

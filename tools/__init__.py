@@ -1,0 +1,2 @@
+"""Repo tooling: the repro-lint static-analysis pass (``tools.lint``) and
+the docs link checker (``tools.check_docs``)."""

@@ -1,0 +1,200 @@
+"""repro-lint: repo-specific static analysis for the scheduler stack.
+
+Four AST-based rule families (stdlib ``ast`` only, no third-party deps):
+
+* ``layer-contract``    — enforce the docs/ARCHITECTURE.md import DAG
+                          (:mod:`tools.lint.layer_dag`) and forbid
+                          cross-module imports of ``_private`` names;
+* ``matrix-schema``     — forbid raw integer column indices into the
+                          solver matrices outside
+                          :mod:`repro.kernels.layout`;
+* ``determinism``       — forbid unseeded RNG and wall-clock reads in
+                          library code, mutable default arguments in
+                          ``repro.core``, and Python control flow /
+                          scalarization on traced values inside Pallas
+                          kernel bodies;
+* ``dtype-discipline``  — forbid dtype-less array constructors and
+                          non-f32 dtypes in kernel code.
+
+Run with ``python -m tools.lint`` (see ``--help``).  A finding on a line
+carrying ``# lint: disable=<rule>[,<rule>...]`` (or ``disable=all``) is
+suppressed; every suppression should say why on the same or previous line.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+__all__ = ["Finding", "Context", "lint_source", "lint_paths", "main",
+           "ALL_RULES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation, pointing at ``path:line:col``."""
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Context:
+    """Everything a rule's ``check`` receives for one file."""
+
+    path: str            # as given (display + suppression lookup)
+    module: Optional[str]  # dotted module name, e.g. "repro.core.engine"
+    source: str
+    tree: ast.Module
+    lines: List[str]
+
+    def finding(self, node: ast.AST, rule: str, message: str) -> Finding:
+        return Finding(self.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), rule, message)
+
+
+def module_name_for(path: Path) -> Optional[str]:
+    """Dotted module name for a repo file: ``src/repro/core/engine.py`` ->
+    ``repro.core.engine``; files outside a known package root -> None."""
+    parts = list(path.parts)
+    for root in ("repro", "tools"):
+        if root in parts:
+            rel = parts[parts.index(root):]
+            if rel[-1] == "__init__.py":
+                rel = rel[:-1]
+            elif rel[-1].endswith(".py"):
+                rel[-1] = rel[-1][:-3]
+            return ".".join(rel)
+    return None
+
+
+_SUPPRESS_RE = re.compile(r"#\s*lint:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+def _suppressions(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """1-based line -> set of suppressed rule names (or {"all"})."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def lint_source(source: str, path: str = "<string>", *,
+                module: Optional[str] = None,
+                select: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint one source string; the programmatic entry point (tests use it).
+
+    ``module`` overrides the dotted-module inference from ``path`` —
+    fixtures pass e.g. ``module="repro.core.engine"`` to put a synthetic
+    snippet in scope of the module-scoped rules.
+    """
+    if module is None:
+        module = module_name_for(Path(path))
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Finding(path, exc.lineno or 1, exc.offset or 0, "parse",
+                        f"syntax error: {exc.msg}")]
+    lines = source.splitlines()
+    ctx = Context(path=path, module=module, source=source, tree=tree,
+                  lines=lines)
+    wanted = set(select) if select is not None else None
+    findings: List[Finding] = []
+    for name, check in ALL_RULES.items():
+        if wanted is not None and name not in wanted:
+            continue
+        findings.extend(check(ctx))
+    sup = _suppressions(lines)
+    kept = [f for f in findings
+            if not (sup.get(f.line) and
+                    ("all" in sup[f.line] or f.rule in sup[f.line]))]
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return kept
+
+
+DEFAULT_TARGETS = ("src/repro", "tools")
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache"}
+
+
+def iter_py_files(targets: Sequence[str], root: Path) -> List[Path]:
+    files: List[Path] = []
+    for t in targets:
+        p = (root / t) if not Path(t).is_absolute() else Path(t)
+        if p.is_file() and p.suffix == ".py":
+            files.append(p)
+        elif p.is_dir():
+            files.extend(sorted(
+                f for f in p.rglob("*.py")
+                if not (_SKIP_DIRS & set(f.parts))))
+    return files
+
+
+def lint_paths(targets: Sequence[str], *, root: Optional[Path] = None,
+               select: Optional[Iterable[str]] = None) -> List[Finding]:
+    root = root or Path(__file__).resolve().parents[2]
+    findings: List[Finding] = []
+    for f in iter_py_files(targets, root):
+        rel = f.relative_to(root) if f.is_relative_to(root) else f
+        findings.extend(lint_source(f.read_text(), str(rel), select=select))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: layer contracts, matrix schema, "
+                    "determinism and dtype discipline.")
+    parser.add_argument("targets", nargs="*", default=list(DEFAULT_TARGETS),
+                        help="files or directories relative to the repo "
+                             f"root (default: {' '.join(DEFAULT_TARGETS)})")
+    parser.add_argument("--select", default=None, metavar="RULE[,RULE]",
+                        help="run only these rule families")
+    parser.add_argument("--json", action="store_true",
+                        help="emit findings as a JSON array")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="list rule families and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for name in ALL_RULES:
+            print(name)
+        return 0
+    select = ([r.strip() for r in args.select.split(",") if r.strip()]
+              if args.select else None)
+    if select:
+        unknown = set(select) - set(ALL_RULES)
+        if unknown:
+            print(f"unknown rule(s): {', '.join(sorted(unknown))}; "
+                  f"known: {', '.join(ALL_RULES)}", file=sys.stderr)
+            return 2
+    findings = lint_paths(args.targets, select=select)
+    if args.json:
+        print(json.dumps([f.as_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        if findings:
+            print(f"{len(findings)} finding(s)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+# Imported at the bottom: rule modules import Finding/Context from here.
+from tools.lint.rules import ALL_RULES  # noqa: E402

@@ -1,0 +1,7 @@
+"""``python -m tools.lint`` entry point."""
+
+import sys
+
+from tools.lint import main
+
+sys.exit(main())

@@ -1,0 +1,17 @@
+"""Rule registry: family name -> ``check(ctx) -> list[Finding]``.
+
+Adding a rule family = writing a module with a ``NAME`` string and a
+``check(ctx)`` function, then registering it here (see docs/LINTING.md).
+"""
+
+from __future__ import annotations
+
+from tools.lint.rules import (determinism, dtype_discipline, layer_contract,
+                              matrix_schema)
+
+ALL_RULES = {
+    layer_contract.NAME: layer_contract.check,
+    matrix_schema.NAME: matrix_schema.check,
+    determinism.NAME: determinism.check,
+    dtype_discipline.NAME: dtype_discipline.check,
+}

@@ -1,0 +1,177 @@
+"""determinism: library code must be replayable bit-for-bit.
+
+Every schedule, fault trace and benchmark in this repo is pinned by golden
+values, so library code may not consult ambient entropy or wall clocks,
+and Pallas kernel bodies may not collapse traced values to Python scalars
+(that either crashes under tracing or silently freezes a traced value at
+trace time).  Four checks:
+
+* **Unseeded / global-state RNG** (all of ``repro``): calls to the legacy
+  ``np.random.<fn>`` global API, to ``np.random.default_rng()`` with no
+  seed, or to stdlib ``random.<fn>`` (except ``random.Random(seed)``).
+* **Wall-clock reads** (``repro.core`` + ``repro.kernels``): ``time.time``
+  / ``time.time_ns`` / ``datetime.now`` — scheduler math must never read
+  the host clock (``time.perf_counter`` in benchmarks/launch is out of
+  scope by construction).
+* **Mutable default arguments** (``repro.core``): a ``def f(x=[])`` default
+  is shared across calls — state that survives between scheduler runs.
+* **Traced-value misuse in kernel bodies** (``repro.kernels``): inside a
+  Pallas kernel (a function with ``*_ref`` parameters), values read from
+  the refs are traced; ``float()``/``int()``/``bool()``/``.item()`` on
+  them, or ``if``/``while`` on a condition derived from them, is flagged.
+  Static Python conditionals on non-traced closure values (e.g.
+  ``if causal:``) are fine — taint starts at the ref reads only.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.lint import Context, Finding
+
+NAME = "determinism"
+
+_LEGACY_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
+              "Philox", "PCG64"}
+
+
+def _attr_chain(node: ast.AST) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _check_rng(ctx: Context) -> List[Finding]:
+    findings = []
+    has_stdlib_random = any(
+        isinstance(n, ast.Import) and any(a.name == "random"
+                                          for a in n.names)
+        for n in ast.walk(ctx.tree))
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if chain.startswith(("np.random.", "numpy.random.")):
+            fn = chain.rsplit(".", 1)[1]
+            if fn == "default_rng" and not node.args and not node.keywords:
+                findings.append(ctx.finding(
+                    node, NAME, "np.random.default_rng() without a seed: "
+                    "results are not replayable — pass an explicit seed"))
+            elif fn not in _LEGACY_OK:
+                findings.append(ctx.finding(
+                    node, NAME, f"legacy global-state RNG {chain}(); use a "
+                    "seeded np.random.default_rng(seed) Generator"))
+        elif (has_stdlib_random and chain.startswith("random.")
+              and chain != "random.Random"):
+            findings.append(ctx.finding(
+                node, NAME, f"stdlib {chain}() draws from the global RNG; "
+                "use a seeded np.random.default_rng(seed)"))
+    return findings
+
+
+_CLOCKS = {"time.time", "time.time_ns", "datetime.now",
+           "datetime.datetime.now", "datetime.utcnow",
+           "datetime.datetime.utcnow"}
+
+
+def _check_clock(ctx: Context) -> List[Finding]:
+    findings = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and _attr_chain(node.func) in _CLOCKS:
+            findings.append(ctx.finding(
+                node, NAME, f"{_attr_chain(node.func)}() reads the host "
+                "wall clock inside scheduler library code"))
+    return findings
+
+
+_MUTABLE_CALLS = {"list", "dict", "set"}
+
+
+def _check_mutable_defaults(ctx: Context) -> List[Finding]:
+    findings = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        defaults = list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None]
+        for d in defaults:
+            mutable = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(d, ast.Call) and isinstance(d.func, ast.Name)
+                and d.func.id in _MUTABLE_CALLS)
+            if mutable:
+                findings.append(ctx.finding(
+                    d, NAME, f"mutable default argument in {node.name}(); "
+                    "defaults are evaluated once and shared across calls"))
+    return findings
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _check_kernel_bodies(ctx: Context) -> List[Finding]:
+    findings = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        refs = {a.arg for a in fn.args.args + fn.args.kwonlyargs
+                if a.arg.endswith("_ref")}
+        if not refs:
+            continue
+        tainted = set(refs)
+        for stmt in ast.walk(fn):
+            # Propagate taint through assignments, in source order (ast.walk
+            # is BFS over the function, close enough for straight-line
+            # kernel bodies where defs precede uses).
+            if isinstance(stmt, ast.Assign):
+                if _names_in(stmt.value) & tainted:
+                    for tgt in stmt.targets:
+                        tainted |= _names_in(tgt)
+            elif isinstance(stmt, ast.AugAssign):
+                if _names_in(stmt.value) & tainted:
+                    tainted |= _names_in(stmt.target)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if (chain in {"float", "int", "bool"} and node.args
+                        and _names_in(node.args[0]) & tainted):
+                    findings.append(ctx.finding(
+                        node, NAME, f"{chain}() on a traced value inside a "
+                        "Pallas kernel body freezes/crashes under tracing"))
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr == "item"
+                      and _names_in(node.func.value) & tainted):
+                    findings.append(ctx.finding(
+                        node, NAME, ".item() on a traced value inside a "
+                        "Pallas kernel body"))
+            elif isinstance(node, (ast.If, ast.While)):
+                if _names_in(node.test) & tainted:
+                    findings.append(ctx.finding(
+                        node, NAME, "Python control flow on a traced value "
+                        "inside a Pallas kernel body; use jnp.where / "
+                        "jax.lax primitives"))
+            elif isinstance(node, ast.Assert):
+                if _names_in(node.test) & tainted:
+                    findings.append(ctx.finding(
+                        node, NAME, "assert on a traced value inside a "
+                        "Pallas kernel body"))
+    return findings
+
+
+def check(ctx: Context) -> List[Finding]:
+    mod = ctx.module or ""
+    if not mod.startswith("repro"):
+        return []
+    findings = _check_rng(ctx)
+    if mod.startswith(("repro.core", "repro.kernels")):
+        findings += _check_clock(ctx)
+    if mod.startswith("repro.core"):
+        findings += _check_mutable_defaults(ctx)
+    if mod.startswith("repro.kernels"):
+        findings += _check_kernel_bodies(ctx)
+    return findings

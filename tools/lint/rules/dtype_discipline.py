@@ -1,0 +1,73 @@
+"""dtype-discipline: kernel code states its dtypes.
+
+The solver stack's bit-identity contracts (scalar/vector placement, dedup
+transparency, the PR-1/4/5 energy goldens) all rest on every array in the
+kernel path being f32 *on purpose*.  A dtype-less constructor silently
+follows the jax x64 flag; an f64 literal upcasts a whole expression.  In
+``repro.kernels`` (the schema module excepted — it holds no arrays):
+
+* ``jnp/np.zeros|ones|full|empty(...)`` must pass a dtype (positionally or
+  by keyword).  ``*_like`` constructors inherit and are fine.
+* ``jnp/np.array|asarray([literal, ...])`` of a list/tuple literal must
+  pass a dtype.
+* ``float64``/``f64`` dtypes are flagged outright.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.lint import Context, Finding
+
+NAME = "dtype-discipline"
+
+#: constructor name -> index of its positional dtype argument.
+_DTYPE_POS = {"zeros": 1, "ones": 1, "empty": 1, "full": 2,
+              "array": 1, "asarray": 1}
+
+
+def _attr_chain(node: ast.AST) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def check(ctx: Context) -> List[Finding]:
+    mod = ctx.module or ""
+    if not mod.startswith("repro.kernels") or mod == "repro.kernels.layout":
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute) and node.attr == "float64":
+            findings.append(ctx.finding(
+                node, NAME, "float64 dtype in kernel code; the solver "
+                "stack is f32 end to end"))
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if "." not in chain:
+            continue
+        base, fn = chain.rsplit(".", 1)
+        if base not in {"jnp", "np", "numpy", "jax.numpy"}:
+            continue
+        if fn not in _DTYPE_POS:
+            continue
+        has_kw_dtype = any(kw.arg == "dtype" for kw in node.keywords)
+        has_pos_dtype = len(node.args) > _DTYPE_POS[fn]
+        if fn in {"array", "asarray"}:
+            # Only literal payloads are in scope: converting an existing
+            # array keeps its dtype, which is fine.
+            if not (node.args
+                    and isinstance(node.args[0], (ast.List, ast.Tuple))):
+                continue
+        if not (has_kw_dtype or has_pos_dtype):
+            findings.append(ctx.finding(
+                node, NAME, f"{chain}() without an explicit dtype in "
+                "kernel code; state the dtype (f32 unless proven "
+                "otherwise)"))
+    return findings

@@ -1,0 +1,109 @@
+"""layer-contract: enforce the docs/ARCHITECTURE.md import DAG.
+
+Two checks over every ``repro.*`` module (``__init__.py`` package facades
+are exempt — they exist to re-export):
+
+* **Layer direction.**  A ranked module (:data:`tools.lint.layer_dag.RANK`)
+  may import modules of its own layer or deeper, the SHARED leaves, and
+  its documented EXTRA_EDGES — nothing else inside ``repro``.  A SHARED
+  leaf may only import other SHARED leaves.  Function-level (lazy) imports
+  are held to the same contract: laziness breaks import cycles, not the
+  architecture.
+
+* **Private names.**  ``from repro.x import _name`` reaches into another
+  module's implementation; private names are module-local by convention.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from tools.lint import Context, Finding
+from tools.lint.layer_dag import EXTRA_EDGES, LAYER_OF, RANK, SHARED
+
+NAME = "layer-contract"
+
+
+def _import_targets(tree: ast.Module) -> List[Tuple[ast.AST, str, Tuple[str, ...]]]:
+    """All ``repro.*`` imports as ``(node, base_module, imported_names)``."""
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.startswith("repro."):
+                    out.append((node, alias.name, ()))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and node.module.startswith("repro") and not node.level:
+                out.append((node, node.module,
+                            tuple(a.name for a in node.names)))
+    return out
+
+
+def _resolve(base: str, names: Tuple[str, ...]) -> List[str]:
+    """Concrete target modules of one import statement.
+
+    ``from repro.core import solver_cache`` names the *submodule*
+    ``repro.core.solver_cache``; ``from repro.core.dvfs import DvfsParams``
+    names the module ``repro.core.dvfs`` itself.  A dotted name is a known
+    module iff it appears in the DAG tables; otherwise the base module is
+    the target.
+    """
+    if not names:
+        return [base]
+    targets = []
+    for n in names:
+        cand = f"{base}.{n}"
+        if cand in RANK or cand in SHARED or any(
+                cand in extras for extras in EXTRA_EDGES.values()):
+            targets.append(cand)
+        else:
+            targets.append(base)
+    return sorted(set(targets))
+
+
+def _violation(importer: str, target: str) -> Optional[str]:
+    """Reason ``importer -> target`` breaks the contract, or None if legal."""
+    if target in SHARED or target == importer:
+        return None
+    if target in EXTRA_EDGES.get(importer, ()):
+        return None
+    # Importing a package facade (repro, repro.core, repro.kernels) pulls
+    # in an unscoped surface; treat it like an unknown module below.
+    if importer in SHARED:
+        return (f"shared leaf module imports {target}; shared leaves may "
+                "only import other shared leaves")
+    r_imp = RANK.get(importer)
+    if r_imp is None:
+        return None  # importer outside the DAG: no contract to enforce
+    r_tgt = RANK.get(target)
+    if r_tgt is None:
+        return (f"imports {target}, which is outside the scheduler-stack "
+                "DAG (docs/ARCHITECTURE.md); add an EXTRA_EDGES entry in "
+                "tools/lint/layer_dag.py if this edge is deliberate")
+    if r_tgt < r_imp:
+        return (f"layer '{LAYER_OF[importer]}' imports UP-layer "
+                f"'{LAYER_OF[target]}' module {target}")
+    return None
+
+
+def check(ctx: Context) -> List[Finding]:
+    if ctx.module is None or not ctx.module.startswith("repro"):
+        return []
+    findings: List[Finding] = []
+    is_facade = ctx.path.endswith("__init__.py")
+    for node, base, names in _import_targets(ctx.tree):
+        # Private-name reach-through (checked even for facades).
+        for n in names:
+            if n.startswith("_") and not n.startswith("__"):
+                findings.append(ctx.finding(
+                    node, NAME,
+                    f"imports private name '{n}' from {base}; private "
+                    "names are module-local — export a public alias"))
+        if is_facade:
+            continue
+        for target in _resolve(base, names):
+            reason = _violation(ctx.module, target)
+            if reason:
+                findings.append(ctx.finding(node, NAME, reason))
+    return findings

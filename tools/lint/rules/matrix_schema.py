@@ -1,0 +1,72 @@
+"""matrix-schema: no raw integer column indices into the solver matrices.
+
+Three hand-synchronized layouts flow through the solver stack — the
+``[n, NCOL]`` task matrix, the ``[n, KEY_COLS]`` cache-key matrix and the
+``[n, SOL_COLS]`` solution matrix.  :mod:`repro.kernels.layout` is the one
+place their columns are declared; everywhere else a literal column number
+(``rows[:, 5]``, ``mat[:, 8:13]``, ``(n, 5)`` widths are NOT flagged —
+only subscripts) is a silent-drift hazard: the layouts once disagreed
+between ``core/single_task.py`` and the kernel until PR 8 unified them.
+
+Scope: the solver-stack modules that actually touch these matrices
+(:data:`SCHEMA_SCOPE`).  Flagged: a 2-D subscript whose column position
+(second tuple element) is a non-negative integer literal or a slice with
+integer-literal endpoints.  Column reads through ``layout.*`` names,
+variables, or ``None``/negative indices are fine.  A genuinely non-schema
+2-D read in scope (e.g. the span grouping in ``core/cluster.py``) carries
+an inline ``# lint: disable=matrix-schema`` with a why-comment.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.lint import Context, Finding
+
+NAME = "matrix-schema"
+
+#: Modules whose 2-D subscripts are solver-matrix column reads.
+SCHEMA_SCOPE = frozenset({
+    "repro.kernels.dvfs_opt",
+    "repro.kernels.ops",
+    "repro.kernels.ref",
+    "repro.core.solver_cache",
+    "repro.core.single_task",
+    "repro.core.machines",
+    "repro.core.bounds",
+    "repro.core.cluster",
+    "repro.core.dvfs",
+})
+
+
+def _is_int_literal(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Constant) and isinstance(node.value, int)
+            and not isinstance(node.value, bool) and node.value >= 0)
+
+
+def _column_literal(node: ast.AST) -> bool:
+    """True if a subscript tuple's column slot is a literal column index."""
+    if _is_int_literal(node):
+        return True
+    if isinstance(node, ast.Slice):
+        return any(_is_int_literal(p) for p in (node.lower, node.upper))
+    return False
+
+
+def check(ctx: Context) -> List[Finding]:
+    if ctx.module not in SCHEMA_SCOPE:
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Subscript):
+            continue
+        sl = node.slice
+        if isinstance(sl, ast.Tuple) and len(sl.elts) >= 2:
+            colslot = sl.elts[1]
+            if _column_literal(colslot):
+                findings.append(ctx.finding(
+                    node, NAME,
+                    "raw integer column index into a solver matrix; use "
+                    "the named columns in repro.kernels.layout"))
+    return findings
