@@ -14,13 +14,19 @@ def record(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def timed(name: str, fn: Callable, *, repeats: int = 1, derived_fn=None):
-    """Run ``fn`` ``repeats`` times; record mean wall time + derived info."""
+def timed(name: str, fn: Callable, *, repeats: int = 1, warmup: int = 0,
+          derived_fn=None):
+    """Run ``fn`` ``repeats`` times; record mean wall time + derived info.
+    ``warmup`` extra calls run first, outside the timed window — jit
+    compiles, trace caches and allocator pools all land there instead of
+    polluting the first timed repeat."""
     outs = []
-    t0 = time.time()
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
     for _ in range(repeats):
         outs.append(fn())
-    dt = (time.time() - t0) / repeats
+    dt = (time.perf_counter() - t0) / repeats
     derived = derived_fn(outs[-1]) if derived_fn else ""
     record(name, dt * 1e6, derived)
     return outs[-1]

@@ -60,16 +60,16 @@ def _solves(ts, mcs, time_kernel: bool):
     itself, not hits on the process-wide solve cache (which
     ``benchmarks/solver_throughput.py`` measures separately).
     """
-    t0 = time.time()
+    t0 = time.perf_counter()
     cfgs = scheduling.configure_all(ts, True, mcs, dedup=False)
-    t_solve = time.time() - t0
+    t_solve = time.perf_counter() - t0
     t_solve_kernel = None
     if time_kernel:
         scheduling.configure_all(ts, True, mcs, use_kernel=True,
                                  dedup=False)  # warm
-        t0 = time.time()
+        t0 = time.perf_counter()
         scheduling.configure_all(ts, True, mcs, use_kernel=True, dedup=False)
-        t_solve_kernel = time.time() - t0
+        t_solve_kernel = time.perf_counter() - t0
     return cfgs, t_solve, t_solve_kernel
 
 
@@ -101,9 +101,9 @@ def run_one(n_tasks: int, algorithm: str = "edl", mix: str = "reference",
     # Warm the deferred-readjustment solver compile out of the timings so
     # the vector/scalar ratio is compile-free.
     scheduling.schedule_offline(ts, placement="vector", **kw)
-    t0 = time.time()
+    t0 = time.perf_counter()
     r_vec = scheduling.schedule_offline(ts, placement="vector", **kw)
-    t_vec = time.time() - t0
+    t_vec = time.perf_counter() - t0
 
     out = {
         "n_tasks": len(ts), "algorithm": algorithm, "mix": mix,
@@ -115,9 +115,9 @@ def run_one(n_tasks: int, algorithm: str = "edl", mix: str = "reference",
         "violations": r_vec.violations, "n_pairs": r_vec.n_pairs,
     }
     if scalar:
-        t0 = time.time()
+        t0 = time.perf_counter()
         r_sca = scheduling.schedule_offline(ts, placement="scalar", **kw)
-        t_sca = time.time() - t0
+        t_sca = time.perf_counter() - t0
         rel = abs(r_vec.e_total - r_sca.e_total) / max(abs(r_sca.e_total),
                                                        1e-12)
         out.update({"scalar_s": t_sca, "speedup": t_sca / t_vec,

@@ -48,9 +48,9 @@ def run_one(n_tasks: int, pattern: str, l: int = 4, theta: float = 0.9,
                               seed=seed, library=lib)
     mcs = online.machines.reference_classes()
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     cfgs = online.online_configs(ts, mcs, use_kernel=use_kernel)
-    t_solve = time.time() - t0
+    t_solve = time.perf_counter() - t0
 
     b = bounds.theoretical_bound(ts, classes=mcs, l=l, rho=cl.RHO)
 
@@ -58,16 +58,14 @@ def run_one(n_tasks: int, pattern: str, l: int = 4, theta: float = 0.9,
     # measure the simulation hot path only.
     kw = dict(l=l, theta=theta, algorithm="edl", cfgs=cfgs,
               use_kernel=use_kernel, bound=False)
-    if scalar:
-        # Warm the deferred-readjustment solver compile out of the timings
-        # so the vector/scalar ratio is compile-free.  (A smaller warmup
-        # would compile a different padded shape and not help; without a
-        # scalar comparison the one-off compile is noise in the reported
-        # throughput, so the extra full run is skipped.)
-        online.schedule_online(ts, placement="vector", **kw)
-    t0 = time.time()
+    # Warm the deferred-readjustment solver compile out of the timings so
+    # the vector/scalar ratio (and the reported throughput) is
+    # compile-free.  A smaller warmup would compile a different padded
+    # shape and not help.
+    online.schedule_online(ts, placement="vector", **kw)
+    t0 = time.perf_counter()
     r_vec = online.schedule_online(ts, placement="vector", **kw)
-    t_vec = time.time() - t0
+    t_vec = time.perf_counter() - t0
 
     out = {
         "n_tasks": len(ts), "pattern": pattern, "solve_s": t_solve,
@@ -77,9 +75,9 @@ def run_one(n_tasks: int, pattern: str, l: int = 4, theta: float = 0.9,
         "violations": r_vec.violations, "n_pairs": r_vec.n_pairs,
     }
     if scalar:
-        t0 = time.time()
+        t0 = time.perf_counter()
         r_sca = online.schedule_online(ts, placement="scalar", **kw)
-        t_sca = time.time() - t0
+        t_sca = time.perf_counter() - t0
         rel = abs(r_vec.e_total - r_sca.e_total) / max(abs(r_sca.e_total),
                                                        1e-12)
         out.update({"scalar_s": t_sca, "speedup": t_sca / t_vec,

@@ -51,6 +51,13 @@ def main(argv=None):
     online_scale.run_one(100000 if args.full else 20000, "uniform",
                          verbose=False)
 
+    print("# --- Pipelined online scheduling (prefetch + incremental "
+          "pools) ---", flush=True)
+    from benchmarks import pipeline
+    pipeline.run_cell(100000 if args.full else 20000, "uniform",
+                      reps=3 if args.full else 1, scalar=False,
+                      verbose=False)
+
     print("# --- Offline scale (shared placement subsystem) ---", flush=True)
     from benchmarks import offline_scale
     offline_scale.run_one(100000 if args.full else 20000, "edl",

@@ -92,9 +92,10 @@ def run(groups: int = 1, utils=(0.2, 0.4), rhos=(1, 2),
     }
     # The rho x Delta (and seed-group) cells of one (interval, mix) re-solve
     # identical (params, allowed) rows; the process-wide solve cache serves
-    # them after the first cell.  Reset stats so the hit-rate below is this
-    # sweep's own cross-cell reuse.
-    solver_cache.GLOBAL_CACHE.reset_stats()
+    # them after the first cell.  Snapshot the lifetime counters so the
+    # hit-rate below is this sweep's own cross-cell reuse
+    # (``schedule_online`` resets the per-run counters at every call).
+    cache_base = solver_cache.GLOBAL_CACHE.stats()
 
     for iv_name in intervals:
         interval, p0_frac, paper_anchor = INTERVAL_SETTINGS[iv_name]
@@ -167,7 +168,11 @@ def run(groups: int = 1, utils=(0.2, 0.4), rhos=(1, 2),
         a = report["anchors"][iv_name]
         record(f"scenario/{iv_name}_anchor", 0.0,
                f"{a['single_task_saving']:.4f} (paper ~{a['paper']})")
-    stats = solver_cache.GLOBAL_CACHE.stats()
+    now = solver_cache.GLOBAL_CACHE.stats()
+    hits = now["hits_total"] - cache_base["hits_total"]
+    misses = now["misses_total"] - cache_base["misses_total"]
+    stats = {"hits": hits, "misses": misses,
+             "hit_rate": hits / (hits + misses) if hits + misses else 0.0}
     report["meta"]["solve_cache"] = stats
     record("scenario/solve_cache", 0.0,
            f"hit_rate {stats['hit_rate']:.3f} ({stats['hits']} hits / "

@@ -28,28 +28,28 @@ def run(n_tasks: int = 4096, verbose: bool = True, full: bool = True) -> dict:
     # warmup compiles.  dedup=False so the timed calls measure the solver,
     # not cache hits (benchmarks/solver_throughput.py measures the cache).
     single_task.configure_tasks(ts.params, allowed, dedup=False)
-    t0 = time.time()
+    t0 = time.perf_counter()
     single_task.configure_tasks(ts.params, allowed, dedup=False)
-    dt_jnp = time.time() - t0
+    dt_jnp = time.perf_counter() - t0
     record("phi/jnp_solver", dt_jnp / len(ts) * 1e6,
            f"{len(ts)/dt_jnp:.0f} tasks/s")
 
     single_task.configure_tasks(ts.params, allowed, use_kernel=True,
                                 dedup=False)
-    t0 = time.time()
+    t0 = time.perf_counter()
     single_task.configure_tasks(ts.params, allowed, use_kernel=True,
                                 dedup=False)
-    dt_k = time.time() - t0
+    dt_k = time.perf_counter() - t0
     record("phi/pallas_kernel(interpret)", dt_k / len(ts) * 1e6,
            f"{len(ts)/dt_k:.0f} tasks/s")
 
     # bound=False: this benchmark times the scheduling hot path (the seed
     # baseline below predates e_bound reporting).
     ts_on = tasks.generate_online(0.05, 0.2, seed=0, horizon=400)
-    t0 = time.time()
+    t0 = time.perf_counter()
     online.schedule_online(ts_on, l=4, theta=0.9, algorithm="edl",
                            bound=False)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     record("online/sim_throughput", dt / 400 * 1e6,
            f"{400/dt:.0f} slots/s, {len(ts_on)} tasks")
 
@@ -62,10 +62,10 @@ def run(n_tasks: int = 4096, verbose: bool = True, full: bool = True) -> dict:
         # deferred readjustment batch).
         ts_10k = tasks.generate_online(0.4, 4.4, seed=0, library=lib,
                                        horizon=1440)
-        t0 = time.time()
+        t0 = time.perf_counter()
         r = online.schedule_online(ts_10k, l=4, theta=0.9, algorithm="edl",
                                    use_kernel=True, bound=False)
-        dt10 = time.time() - t0
+        dt10 = time.perf_counter() - t0
         speedup = SEED_10K_EDL_SECONDS / dt10
         record("online/10k_edl_kernel", dt10 / 1440 * 1e6,
                f"{len(ts_10k)/dt10:.0f} tasks/s, {speedup:.1f}x vs seed")

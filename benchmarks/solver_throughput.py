@@ -94,20 +94,20 @@ def bench_cell(kind: str, use_kernel: bool, n_tasks: int,
 
     run(dedup=False)                       # compile warm-up, both paths
     run(dedup=True)
-    t0 = time.time()
+    t0 = time.perf_counter()
     ref = run(dedup=False)
-    t_direct = time.time() - t0
+    t_direct = time.perf_counter() - t0
 
     solver_cache.GLOBAL_CACHE.clear()      # cold: unique rows hit the solver
     solver_cache.GLOBAL_CACHE.reset_stats()
-    t0 = time.time()
+    t0 = time.perf_counter()
     cold = run(dedup=True)
-    t_cold = time.time() - t0
+    t_cold = time.perf_counter() - t0
     cold_stats = solver_cache.GLOBAL_CACHE.stats()
 
-    t0 = time.time()                       # warm: every row is a cache hit
+    t0 = time.perf_counter()                       # warm: every row is a cache hit
     warm = run(dedup=True)
-    t_warm = time.time() - t0
+    t_warm = time.perf_counter() - t0
 
     assert _configs_equal(ref, cold), (kind, path, "cold dedup diverged")
     assert _configs_equal(ref, warm), (kind, path, "warm dedup diverged")
@@ -154,10 +154,10 @@ def bench_refinement(seed: int = 9, verbose: bool = True) -> Dict:
     out: Dict = {"n_golden": len(lib)}
     for label, grid in (("flat128", (128, 2)), ("hier64x64", (64, 64))):
         ops.dvfs_solve_matrix(keys, grid=grid)  # compile warm-up
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(5):
             sol = ops.dvfs_solve_matrix(keys, grid=grid)
-        t_k = (time.time() - t0) / 5
+        t_k = (time.perf_counter() - t0) / 5
         rel = float(np.max(np.abs(sol[:, 5] - expect[:, 5]) / expect[:, 5]))
         out[f"{label}_max_rel_err"] = rel
         out[f"{label}_kernel_s"] = t_k
@@ -243,10 +243,10 @@ def smoke(n_tasks: int, budget: float, min_speedup: float,
     (cold cache) inside ``budget`` seconds, bit-identically; and the
     hierarchical kernel must beat the flat-128 grid on accuracy at
     equal-or-lower time."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     cell = bench_cell("trace-duplicated", use_kernel=True, n_tasks=n_tasks)
     refinement = bench_refinement()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     assert cell["bit_identical"]
     assert cell["speedup_cold"] >= min_speedup, (
         f"dedup speedup regressed: {cell['speedup_cold']:.2f}x < "

@@ -20,12 +20,18 @@ from repro.core import cluster as cl, online, scheduling, solver_cache, tasks
 THETAS = (0.8, 0.85, 0.9, 0.95, 1.0)
 
 
-def _report_cache(side: str, verbose: bool) -> Dict:
+def _report_cache(side: str, base: Dict, verbose: bool) -> Dict:
     """Record the sweep's cross-cell solve reuse: every (l, θ) cell of one
     seed shares the same Algorithm-1 rows, so after the first cell the
     process-wide solve cache serves them all (θ only changes the deferred
-    readjustment windows)."""
-    stats = solver_cache.GLOBAL_CACHE.stats()
+    readjustment windows).  Counted as the lifetime-counter delta since
+    ``base`` — ``schedule_online`` resets the per-run counters at every
+    call, so those only cover the last cell."""
+    now = solver_cache.GLOBAL_CACHE.stats()
+    hits = now["hits_total"] - base["hits_total"]
+    misses = now["misses_total"] - base["misses_total"]
+    stats = {"hits": hits, "misses": misses,
+             "hit_rate": hits / (hits + misses) if hits + misses else 0.0}
     record(f"theta/{side}_solve_cache", 0.0,
            f"hit_rate {stats['hit_rate']:.3f} ({stats['hits']} hits / "
            f"{stats['misses']} misses)")
@@ -38,7 +44,7 @@ def _report_cache(side: str, verbose: bool) -> Dict:
 
 def run_offline(groups=3, util=0.4, ls=(1, 4, 16), verbose=True) -> Dict:
     lib = tasks.app_library()
-    solver_cache.GLOBAL_CACHE.reset_stats()
+    cache_base = solver_cache.GLOBAL_CACHE.stats()
     out = {}
     for seed in range(groups):
         ts = tasks.generate_offline(util, seed=seed, library=lib)
@@ -58,14 +64,14 @@ def run_offline(groups=3, util=0.4, ls=(1, 4, 16), verbose=True) -> Dict:
     for l in ls:
         best = max(THETAS, key=lambda th: summary[f"l{l}/theta{th}"])
         record(f"theta/offline_best_l{l}", 0.0, f"theta={best}")
-    summary["solve_cache"] = _report_cache("offline", verbose)
+    summary["solve_cache"] = _report_cache("offline", cache_base, verbose)
     return summary
 
 
 def run_online(groups=2, u_off=0.1, u_on=0.4, horizon=400, ls=(1, 4, 16),
                verbose=True) -> Dict:
     lib = tasks.app_library()
-    solver_cache.GLOBAL_CACHE.reset_stats()
+    cache_base = solver_cache.GLOBAL_CACHE.stats()
     out = {}
     base_tot = {}
     for seed in range(groups):
@@ -103,7 +109,7 @@ def run_online(groups=2, u_off=0.1, u_on=0.4, horizon=400, ls=(1, 4, 16),
         record(f"theta/online_reduction_l{l}", 0.0,
                f"best_theta={best} reduction={reds[best]:.4f} "
                f"(paper 0.30-0.33)")
-    summary["solve_cache"] = _report_cache("online", verbose)
+    summary["solve_cache"] = _report_cache("online", cache_base, verbose)
     return summary
 
 

@@ -83,6 +83,10 @@ class ScheduleResult:
     #: fault-injection counters (repro.core.faults.FaultInjector.stats);
     #: None for a failure-free run.
     fault_stats: dict = None
+    #: solve-cache counters (solver_cache.GLOBAL_CACHE.stats, reset at the
+    #: start of each ``schedule_online(dedup=True)`` call so the numbers
+    #: are per-run); None when the run bypassed the cache.
+    cache_stats: dict = None
 
     @property
     def e_total(self) -> float:

@@ -97,6 +97,14 @@ class ClusterEngine:
         self._pair_failed = np.zeros(cap_p, dtype=bool)
         self._srv_failed = np.zeros(cap_s, dtype=bool)
         self._any_failed = False
+        # Dirty-pair tracking for incremental placement pools: with
+        # ``track_offs`` on, settle() logs every server it powers off (the
+        # pool owner deletes just those pair blocks instead of rebuilding),
+        # and ``pool_epoch`` bumps on any fault transition — the coarse
+        # invalidate-everything signal for prefetched pool state.
+        self.track_offs = False
+        self._off_log: list = []
+        self.pool_epoch = 0
 
     # Back-compat scalar views (meaningful for the single-class engine).
     @property
@@ -129,6 +137,10 @@ class ClusterEngine:
 
     def n_on_servers(self) -> int:
         return int(np.count_nonzero(self._on[: self.n_servers]))
+
+    def server_class(self, sid: int) -> int:
+        """Machine-class id of one server."""
+        return int(self._srv_cls[sid])
 
     # -- growth --------------------------------------------------------------
     def _grow_pairs(self, extra: int):
@@ -274,6 +286,15 @@ class ClusterEngine:
             self._on_time[: ns][off] += (mu_srv[off] + self.rho
                                          - self._on_since[: ns][off])
             self._on[: ns][off] = False
+            if self.track_offs:
+                self._off_log.extend(np.flatnonzero(off).tolist())
+
+    def drain_offs(self) -> list:
+        """Return (and clear) the server ids powered off since the last
+        drain.  Only populated with ``track_offs`` set."""
+        out = self._off_log
+        self._off_log = []
+        return out
 
     # Back-compat name: the sweep is now the exact event-settling primitive
     # (the old sweep booked ``t - on_since`` at whatever slot it happened to
@@ -312,6 +333,7 @@ class ClusterEngine:
         fresh = pids[fresh_m]
         if fresh.size == 0:
             return fresh
+        self.pool_epoch += 1
         self._pair_failed[fresh] = True
         self._any_failed = True
         if busy_rollback is not None:
@@ -344,6 +366,7 @@ class ClusterEngine:
         sel = pids[self._pair_failed[pids]]
         if sel.size == 0:
             return sel
+        self.pool_epoch += 1
         self._pair_failed[sel] = False
         for sid in np.unique(sel // self.l).tolist():
             lo = sid * self.l

@@ -232,6 +232,78 @@ def configure_classes(params: DvfsParams, allowed: np.ndarray,
     return cfgs
 
 
+class ClassSolves:
+    """In-flight Algorithm-1 solves for one chunk of tasks on every class.
+
+    Wraps either one :class:`~repro.core.solver_cache.AsyncSolve` per class
+    (jnp path) or a single stacked-dispatch handle (kernel path);
+    :meth:`result` blocks and returns the per-class ``[k, 8]`` solution
+    rows — the same bits the synchronous :func:`configure_classes` would
+    have produced for those rows.
+    """
+
+    __slots__ = ("_handles", "_stacked", "_n")
+
+    def __init__(self, handles=None, stacked=None, n: int = 0):
+        self._handles = handles
+        self._stacked = stacked
+        self._n = n
+
+    def result(self) -> List[np.ndarray]:
+        if self._stacked is not None:
+            rows = self._stacked.result()
+            n = self._n
+            return [rows[c * n:(c + 1) * n]
+                    for c in range(rows.shape[0] // n)]
+        return [h.result() for h in self._handles]
+
+
+def configure_classes_async(params: DvfsParams, allowed: np.ndarray,
+                            classes: Sequence[MachineClass],
+                            interval: ScalingInterval = dvfs.WIDE,
+                            use_kernel: bool = False,
+                            dedup: bool = True) -> ClassSolves:
+    """Dispatch Algorithm 1 for a *chunk* of tasks on every class without
+    blocking — the prefetch half of the pipelined online scheduler.
+
+    Mirrors :func:`configure_classes` batch shape for batch shape: the
+    kernel path stacks the class blocks (with per-row interval bounds)
+    into ONE dispatch, the jnp path issues one per-class solve.  Rows are
+    keyed and cached exactly like the synchronous path (same tags), so the
+    values that come back are bit-identical and the cache composes across
+    pipelined and monolithic runs.
+    """
+    allowed = np.asarray(allowed, dtype=np.float64)
+    if not use_kernel:
+        return ClassSolves(handles=[
+            single_task.solve_rows_async(
+                mc.adapt(params), allowed, mc.effective_interval(interval),
+                boundary=False, use_kernel=False, dedup=dedup)
+            for mc in classes])
+
+    from repro.core import solver_cache
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels.dvfs_opt import DEFAULT_GRID
+
+    n = allowed.shape[0]
+    adapted = [mc.adapt(params) for mc in classes]
+    ivs = [mc.effective_interval(interval) for mc in classes]
+    big = DvfsParams(*(np.concatenate([np.asarray(f, np.float64)
+                                       for f in cols])
+                       for cols in zip(*(a.astuple() for a in adapted))))
+    interval_rows = np.concatenate(
+        [np.broadcast_to(np.asarray(iv.bounds(), np.float64),
+                         (n, layout.N_BOUNDS))
+         for iv in ivs], axis=0)
+    keys = solver_cache.build_keys(big.astuple(), np.tile(allowed, len(ivs)),
+                                   False, interval_rows)
+    handle = solver_cache.solve_rows_async(
+        keys, lambda km: kernel_ops.dvfs_solve_matrix(km, block=False),
+        tag=f"k{int(DEFAULT_GRID[0])}x{int(DEFAULT_GRID[1])}",
+        cache=solver_cache.GLOBAL_CACHE if dedup else None, unique=False)
+    return ClassSolves(stacked=handle, n=n)
+
+
 def default_configs(task_set, classes: Sequence[MachineClass],
                     allowed=None) -> List[TaskConfig]:
     """The no-DVFS configuration per class: every task at (1, 1, 1) with the

@@ -59,16 +59,34 @@ Energy accounting follows Eq. (7) with per-class constants:
 and every result reports ``e_bound``, the §5 analytical lower bound
 (:func:`repro.core.bounds.theoretical_bound` with the DRS floors).
 
+**Pipelined execution** (``pipeline=True``, the default): the driver cuts
+the arrival groups into ~:data:`PIPELINE_CHUNK_TASKS`-task chunks and
+double-buffers the DVFS solves against the host placement — chunk ``k+1``'s
+Algorithm-1 batch is dispatched (JAX async dispatch; the host never blocks
+on dispatch) before the host places chunk ``k``, and the deferred
+θ-readjustment boundary re-solves join the next in-flight batch at each
+chunk boundary instead of forcing a run-end sync.  The vector placement
+path additionally keeps its per-class candidate pools alive across arrival
+groups (``PlacementContext(incremental=True)``) with delta reconciliation.
+Both halves are bit-identical to the synchronous path by construction: the
+f32 key matrix IS the solver input and every solver is row-independent, so
+chunked solves return the same bits as one monolithic batch, and the
+persistent pools are pinned against the per-group rebuild by the frontier
+invariant (see :mod:`repro.core.placement`).  ``pipeline=False`` runs the
+reference path unchanged.  See docs/ARCHITECTURE.md (pipelined online
+scheduling) for the dataflow diagram and the invalidation rules.
+
 See docs/EQUATIONS.md for the full equation/algorithm -> code map.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional
 
 import numpy as np
 
-from repro.core import bounds, cluster as cl, dvfs, machines
+from repro.core import bounds, cluster as cl, dvfs, machines, single_task
 from repro.core.dvfs import ScalingInterval
 from repro.core.engine import ClusterEngine
 from repro.core.faults import FaultInjector, FaultTrace, make_degrade
@@ -77,6 +95,7 @@ from repro.core.scheduling import (chosen_feasibility, count_violations,
                                    fill_readjusted)
 from repro.core.single_task import TaskConfig
 from repro.core.tasks import TaskSet
+from repro.kernels import layout
 
 
 def arrival_slots(task_set: TaskSet) -> np.ndarray:
@@ -118,6 +137,241 @@ def online_configs(task_set: TaskSet, mcs, use_dvfs: bool = True,
     return machines.default_configs(task_set, mcs, allowed=allowed)
 
 
+# lint: prefetch-region-begin
+#
+# Everything between these markers runs with a solve batch in flight.
+# Host<->device sync points are confined to methods whose name ends in
+# ``_sync`` — tools/lint flags any other blocking call (np.asarray /
+# jax.device_get / .block_until_ready) inside the region.
+
+#: Target chunk size (tasks) for the pipelined driver: whole arrival groups
+#: are accumulated until the count reaches this.  Large enough that one
+#: batched solve amortizes its dispatch and per-chunk host bookkeeping
+#: (eager op dispatch overhead is per chunk, not per row), small enough
+#: that a 1M-task horizon still pipelines ~30 chunks deep.
+PIPELINE_CHUNK_TASKS = 32768
+
+
+def _chunk_groups(groups, target: int):
+    """Cut the (slot, idx) arrival groups into consecutive runs of >=
+    ``target`` tasks (always whole groups; the tail run may be smaller)."""
+    chunks, cur, count = [], [], 0
+    for g in groups:
+        cur.append(g)
+        count += g[1].size
+        if count >= target:
+            chunks.append(cur)
+            cur, count = [], 0
+    if cur:
+        chunks.append(cur)
+    return chunks
+
+
+class _PipelineState:
+    """The config-prefetch half of the pipelined driver.
+
+    Owns the full-horizon per-class config arrays the rest of the run reads
+    (:class:`~repro.core.single_task.TaskConfig` views created once, so the
+    :class:`~repro.core.placement.PlacementContext` holds live aliases), the
+    class-preference matrix, and the per-class ``t_min`` floors computed
+    once up front (``dvfs.min_time`` is elementwise, so whole-horizon floors
+    sliced per chunk are bitwise equal to per-call floors).
+
+    :meth:`dispatch` sends one chunk's Algorithm-1 batch through
+    :func:`repro.core.machines.configure_classes_async` (same keys, tags and
+    batch shapes as the synchronous :func:`online_configs`, so the solve
+    cache composes across both paths); :meth:`consume_sync` — the ONE sync
+    point — blocks on the in-flight rows and scatters the assembled config
+    columns into the horizon arrays.
+    """
+
+    def __init__(self, task_set: TaskSet, mcs, interval: ScalingInterval,
+                 allowed: np.ndarray, use_kernel: bool, dedup: bool):
+        self.mcs = mcs
+        self.interval = interval
+        self.use_kernel = use_kernel
+        self.dedup = dedup
+        self.params = task_set.params
+        # Setup-time host-array normalization — no solve is in flight yet
+        # (astype(copy=False) is a no-op view on the float64 input).
+        self.allowed = allowed.astype(np.float64, copy=False)
+        n = self.allowed.shape[0]
+        self.adapted = [mc.adapt(self.params) for mc in mcs]
+        self.ivs = [mc.effective_interval(interval) for mc in mcs]
+        self.tmin = self._floors_sync()
+        # Full-horizon config columns, filled chunk by chunk.  f64 storage:
+        # every consumer (precompute casts, make_assignment floats, list
+        # mirrors) upcasts the solver's f32 values anyway, and f32 -> f64 is
+        # exact, so the scattered values read back bit-identically.
+        self.cfgs = [TaskConfig(
+            v=np.zeros(n), fc=np.zeros(n), fm=np.zeros(n),
+            t_hat=np.zeros(n), p_hat=np.zeros(n), e_hat=np.zeros(n),
+            t_min=np.zeros(n), deadline_prior=np.zeros(n, dtype=bool),
+            feasible=np.zeros(n, dtype=bool), n_deadline_prior=0)
+            for _ in mcs]
+        self.order_cls = np.zeros((len(mcs), n), dtype=np.int64)
+
+    def _floors_sync(self) -> list:
+        """Whole-horizon ``t_min`` per class, one blocking solve at setup
+        (before anything is in flight)."""
+        return [np.asarray(dvfs.min_time(a, iv), np.float64)
+                for a, iv in zip(self.adapted, self.ivs)]
+
+    def dispatch(self, idx: np.ndarray):
+        """Send one chunk's all-classes solve; returns the in-flight handle
+        (``machines.ClassSolves``).  ``adapt`` is elementwise, so adapting
+        the chunk subset equals slicing the adapted horizon, bitwise."""
+        return machines.configure_classes_async(
+            self.params[idx], self.allowed[idx], self.mcs, self.interval,
+            use_kernel=self.use_kernel, dedup=self.dedup)
+
+    def consume_sync(self, handle, idx: np.ndarray):
+        """Block on one chunk's rows and scatter the assembled configs into
+        the horizon arrays (+ the chunk's class-preference columns —
+        ``argsort(axis=0)`` is per-column independent, so chunk columns
+        equal the monolithic ``machines.class_order`` sliced)."""
+        from repro.core import solver_cache
+
+        allowed = self.allowed[idx]
+        for c, rows in enumerate(handle.result()):
+            sol = solver_cache.rows_to_solution(rows)
+            cfg = single_task.config_from_solution(
+                sol, self.adapted[c], allowed, self.ivs[c],
+                tmin=self.tmin[c][idx])
+            dst = self.cfgs[c]
+            dst.v[idx] = cfg.v
+            dst.fc[idx] = cfg.fc
+            dst.fm[idx] = cfg.fm
+            dst.t_hat[idx] = cfg.t_hat
+            dst.p_hat[idx] = cfg.p_hat
+            dst.e_hat[idx] = cfg.e_hat
+            dst.t_min[idx] = cfg.t_min
+            dst.deadline_prior[idx] = cfg.deadline_prior
+            dst.feasible[idx] = cfg.feasible
+        if len(self.mcs) > 1:
+            e = np.stack([c.e_hat[idx] for c in self.cfgs])
+            feas = np.stack([c.feasible[idx] for c in self.cfgs])
+            key = np.where(feas, e, e + machines.INFEASIBLE_PENALTY)
+            self.order_cls[:, idx] = np.argsort(key, axis=0, kind="stable")
+
+
+class _ReadjustPrefetch:
+    """The θ-readjustment half of the pipeline: at every chunk boundary the
+    rows queued since the last boundary are dispatched per class
+    (deadline-boundary solves, same keys/tags as
+    :func:`repro.core.single_task.readjust_batch`), joining the in-flight
+    work instead of the run-end batch; :meth:`flush_sync` materializes every
+    batch and writes the records back exactly like
+    :func:`repro.core.scheduling.fill_readjusted`.
+
+    A readjusted window only pins the task's finish time — never the
+    packing — and the solve values depend only on (task params, window,
+    class), all fixed at queue time, so host-state changes (placements,
+    power-offs, fault injection) between dispatch and flush cannot change
+    the values.  Pair failures only *invalidate pools* (epoch bump), never
+    prefetched solves.
+    """
+
+    def __init__(self, task_set: TaskSet, mcs, interval: ScalingInterval,
+                 use_kernel: bool, dedup: bool):
+        self.params = task_set.params
+        self.mcs = mcs
+        self.interval = interval
+        self.use_kernel = use_kernel
+        self.dedup = dedup
+        self.sent = 0
+        self.batches: list = []   # (assignment idx, windows, AsyncSolve)
+
+    def dispatch(self, pending: List[PendingRow]):
+        """Send every pending row queued since the last call, one boundary
+        batch per class present."""
+        new = pending[self.sent:]
+        if not new:
+            return
+        self.sent = len(pending)
+        k = len(new)
+        ai = np.fromiter((r[0] for r in new), np.int64, k)
+        rows = np.fromiter((r[1] for r in new), np.int64, k)
+        windows = np.fromiter((r[2] for r in new), np.float64, k)
+        cids = np.fromiter((r[3] for r in new), np.int64, k)
+        for cid in np.unique(cids):
+            mc = self.mcs[int(cid)]
+            m = cids == cid
+            handle = single_task.solve_rows_async(
+                mc.adapt(self.params[rows[m]]), windows[m],
+                mc.effective_interval(self.interval), boundary=True,
+                use_kernel=self.use_kernel, dedup=self.dedup)
+            self.batches.append((ai[m], windows[m], handle))
+
+    def flush_sync(self, assignments: List[cl.Assignment],
+                   pending: List[PendingRow]):
+        """Dispatch the tail rows, block on every batch and write the DVFS
+        fields back (the pipelined :func:`fill_readjusted`)."""
+        self.dispatch(pending)
+        for ai, windows, handle in self.batches:
+            rows = handle.result()
+            v = rows[:, layout.SOL_V].astype(np.float64)
+            fc = rows[:, layout.SOL_FC].astype(np.float64)
+            fm = rows[:, layout.SOL_FM].astype(np.float64)
+            t = rows[:, layout.SOL_T].astype(np.float64)
+            p = rows[:, layout.SOL_P].astype(np.float64)
+            feas = rows[:, layout.SOL_FEASIBLE] > 0.5
+            t = np.where(feas, np.minimum(t, windows), t)  # snap f32 residual
+            e = p * t
+            for j, a_i in enumerate(ai.tolist()):
+                a = assignments[a_i]
+                assignments[a_i] = dataclasses.replace(
+                    a, v=float(v[j]), fc=float(fc[j]), fm=float(fm[j]),
+                    power=float(p[j]), energy=float(e[j]))
+        self.batches = []
+
+
+def _chunk_span(ch):
+    """One chunk's task index set: a contiguous ``slice`` when the indices
+    form an unbroken run (always, for the slot-sorted traces
+    ``tasks.generate_trace`` emits — then every per-chunk gather is a
+    view), the concatenated index array otherwise."""
+    cat = np.concatenate([idx for _, idx in ch])
+    lo, hi = int(cat[0]), int(cat[-1]) + 1
+    if hi - lo == cat.shape[0] and np.array_equal(
+            cat, np.arange(lo, hi, dtype=cat.dtype)):
+        return slice(lo, hi)
+    return cat
+
+
+def _drive_pipelined(groups, state: Optional[_PipelineState],
+                     readj: _ReadjustPrefetch, ctx: PlacementContext,
+                     pending: List[PendingRow], place_group, vector: bool,
+                     prep: bool = False):
+    """The double-buffered driver loop: with chunk ``k``'s configs landed,
+    dispatch chunk ``k+1``'s solve and the readjustment rows queued so far,
+    THEN place chunk ``k`` — the device computes ahead while the host
+    packs.  ``state is None`` (configs injected / DVFS off) degenerates to
+    chunked placement with the readjustment prefetch only.  ``prep``
+    (worst-fit vector placement only) additionally hoists each group's
+    placement prologue into one vectorized
+    :meth:`~repro.core.placement.PlacementContext.prepare_chunk` pass."""
+    chunks = _chunk_groups(groups, PIPELINE_CHUNK_TASKS)
+    spans = [_chunk_span(ch) for ch in chunks]
+    handle = state.dispatch(spans[0]) if state is not None and chunks else None
+    for j, ch in enumerate(chunks):
+        if state is not None:
+            nxt = state.dispatch(spans[j + 1]) if j + 1 < len(chunks) else None
+            state.consume_sync(handle, spans[j])
+            if vector:
+                ctx.update_tasks(spans[j])
+            handle = nxt
+        readj.dispatch(pending)
+        if prep:
+            for (slot, idx), pr in zip(ch, ctx.prepare_chunk(ch)):
+                place_group(slot, idx, pr)
+        else:
+            for slot, idx in ch:
+                place_group(slot, idx)
+
+# lint: prefetch-region-end
+
+
 def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                     algorithm: str = "edl", use_dvfs: bool = True,
                     interval: ScalingInterval = dvfs.WIDE,
@@ -128,7 +382,8 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
                     cfgs: Optional[List[TaskConfig]] = None,
                     bound: bool = True,
                     dedup: bool = True,
-                    faults: Optional[FaultTrace] = None) -> cl.ScheduleResult:
+                    faults: Optional[FaultTrace] = None,
+                    pipeline: bool = True) -> cl.ScheduleResult:
     """Run the online simulation end to end (Algorithms 4-6).
 
     ``algorithm`` is ``"edl"`` (Algorithm 5, SPT + theta-readjustment) or
@@ -151,6 +406,12 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     tasks re-enter placement with shrunken DVFS windows, and the result
     carries ``fault_stats``.  ``faults=None`` (default) leaves every
     failure check disengaged, bit-identical to the pre-fault behaviour.
+
+    ``pipeline=True`` (default) overlaps the DVFS solve batches with the
+    host placement (async chunked config prefetch + deferred readjustment
+    batches joining the in-flight work + persistent candidate pools on the
+    vector path) — bit-identical to ``pipeline=False``, the synchronous
+    reference path (pinned by ``tests/test_pipeline.py``).
     """
     algorithm = algorithm.lower()
     if algorithm not in ("edl", "bin"):
@@ -162,11 +423,28 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     n = len(task_set)
     deadline = np.asarray(task_set.deadline, dtype=np.float64)
 
-    if cfgs is None:
-        cfgs = online_configs(task_set, mcs, use_dvfs=use_dvfs,
-                              interval=interval, use_kernel=use_kernel,
-                              dedup=dedup)
-    order_cls = machines.class_order(cfgs)          # [C, n]
+    from repro.core import solver_cache
+    if dedup:
+        # Per-run counters (reported as ``result.cache_stats``); the cached
+        # rows themselves persist across runs.
+        solver_cache.GLOBAL_CACHE.reset_stats()
+
+    groups = _slot_groups(task_set)
+
+    prefetch = pipeline and cfgs is None and use_dvfs and n > 0
+    state: Optional[_PipelineState] = None
+    if prefetch:
+        allowed = deadline - arrival_slots(task_set)
+        state = _PipelineState(task_set, mcs, interval, allowed,
+                               use_kernel, dedup)
+        cfgs = state.cfgs               # live views, filled chunk by chunk
+        order_cls = state.order_cls
+    else:
+        if cfgs is None:
+            cfgs = online_configs(task_set, mcs, use_dvfs=use_dvfs,
+                                  interval=interval, use_kernel=use_kernel,
+                                  dedup=dedup)
+        order_cls = machines.class_order(cfgs)      # [C, n]
 
     eng = ClusterEngine(l, servers=True, rho=rho, classes=mcs)
     assignments: List[cl.Assignment] = []
@@ -174,7 +452,8 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
     ctx = PlacementContext(eng, cfgs, deadline, theta=theta,
                            readjust=(algorithm == "edl"),
                            assignments=assignments, pending=pending,
-                           order_cls=order_cls)
+                           order_cls=order_cls,
+                           incremental=(pipeline and placement == "vector"))
 
     injector = None
     if faults is not None:
@@ -182,7 +461,7 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
             eng, ctx, faults, rule=("wf" if algorithm == "edl" else "ff"),
             degrade=make_degrade(task_set, mcs, interval, use_dvfs))
 
-    for slot, idx in _slot_groups(task_set):
+    def place_group(slot: int, idx: np.ndarray, prep=None):
         t_now = float(slot)
         if injector is not None:
             # Apply every failure/recovery event up to this slot, each
@@ -190,7 +469,9 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
             injector.advance(t_now)
         eng.settle(t_now)
 
-        order = np.argsort(deadline[idx], kind="stable")  # EDF
+        # EDF order — precomputed chunk-wide when ``prep`` is injected.
+        order = None if prep is not None \
+            else np.argsort(deadline[idx], kind="stable")
 
         base = len(assignments)
         if algorithm == "bin" and slot == 0:
@@ -200,21 +481,36 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
             if algorithm == "bin":
                 ctx.place_group_select(idx, order, t_now, "ff")
             else:
-                ctx.place_group_vector(idx, order, t_now)
+                ctx.place_group_vector(idx, order, t_now, prep=prep)
         else:
             ctx.place_group_scalar(idx, order, t_now,
                                    "wf" if algorithm == "edl" else "ff")
         if injector is not None:
             injector.register(base)
 
-    if injector is not None:
-        injector.advance(np.inf)       # events after the last arrival slot
-
-    # Deferred theta-readjustment solves: one batched dispatch per class.
-    fill_readjusted(assignments, pending, task_set, interval, use_kernel, mcs,
-                    dedup=dedup)
+    if pipeline:
+        readj = _ReadjustPrefetch(task_set, mcs, interval, use_kernel, dedup)
+        _drive_pipelined(groups, state, readj, ctx, pending, place_group,
+                         vector=(placement == "vector"),
+                         prep=(placement == "vector" and algorithm == "edl"))
+        if injector is not None:
+            injector.advance(np.inf)   # events after the last arrival slot
+        # Materialize the in-flight readjustment batches + the tail rows.
+        readj.flush_sync(assignments, pending)
+    else:
+        for slot, idx in groups:
+            place_group(slot, idx)
+        if injector is not None:
+            injector.advance(np.inf)   # events after the last arrival slot
+        # Deferred theta-readjustment solves: one batched dispatch per class.
+        fill_readjusted(assignments, pending, task_set, interval, use_kernel,
+                        mcs, dedup=dedup)
     if injector is not None:
         injector.finalize_records()    # re-price truncated records
+
+    # Per-run solve-cache counters: the config + readjustment solves (the
+    # e_bound solve below is not part of the scheduling hot path).
+    cache_stats = solver_cache.GLOBAL_CACHE.stats() if dedup else None
 
     e_idle, e_overhead, n_servers = eng.finalize()
     e_run = float(sum(a.energy for a in assignments))
@@ -231,4 +527,5 @@ def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,
         violations=violations, assignments=assignments, makespan=mk,
         feasible_pairs=eng.feasible_pairs, e_bound=e_bound,
         fault_stats=dict(injector.stats) if injector is not None else None,
+        cache_stats=cache_stats,
     )

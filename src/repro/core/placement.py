@@ -70,6 +70,14 @@ from repro.core.single_task import TaskConfig
 
 _EPS = 1e-9
 
+# Persistent candidate streams are built/kept this many times deeper than
+# the current group's ask: deep enough that consecutive groups rarely
+# exhaust the carried frontier (a rebuild is an argpartition over the whole
+# pool), shallow enough that the per-group touched-merge stays O(stream).
+# Result-neutral: streams are a coverage window over the same (mu, pair id)
+# order, and every consumer re-slices ``[:need]``.
+_STREAM_OVERSHOOT = 8
+
 #: pending θ-readjustment row: (assignment_index, task_index, window, class_id)
 PendingRow = Tuple[int, int, float, int]
 
@@ -115,7 +123,8 @@ def precompute(cfgs: Sequence[TaskConfig], order_cls: np.ndarray) -> dict:
 
 
 class _GroupPools:
-    """Per-class compact pools for one placement call.
+    """Per-class compact pools for one placement call — or, in persistent
+    mode, carried across every call of a run.
 
     A pool is the pair-id-ascending snapshot of the eligible pairs of one
     class, kept in sync for the rest of the call while the engine itself is
@@ -124,11 +133,34 @@ class _GroupPools:
     drop out by exact ``mu`` comparison, a power-on appends its fresh
     pairs), and ``min_new`` tracks the smallest already-assigned finish
     time so a frontier re-entry is detected across batch rounds.
+
+    **Persistent mode** (``PlacementContext(incremental=True)``, the
+    pipelined online path): pools and candidate streams survive from one
+    arrival group to the next under three delta rules instead of the
+    per-group full rebuild —
+
+    * *touched re-entry*: every pair whose ``mu`` moved (assignment, fresh
+      power-on splice) is recorded by **pair id** (ids are stable under the
+      position shifts that splices/deletions cause); at the next group
+      the touched set is merged back into the stream at its current ``mu``.
+      ``thresh`` records the stream's ``(mu, pair id)`` coverage bound from
+      build time: every pool entry outside the stream compares strictly
+      greater, assignments only *raise* ``mu``, so merged entries above the
+      bound can be dropped and the stream stays the true global frontier.
+    * *power-off deletion*: servers the engine's DRS settle powered off
+      (``ClusterEngine.drain_offs``) have their contiguous pair block cut
+      out of the pool; stream positions shift left.
+    * *epoch invalidation*: any fault transition (``fail_pairs`` /
+      ``revive_pairs`` bump ``ClusterEngine.pool_epoch``) mutates pairs
+      behind the pool's back — eligibility masks, mu truncations, orphan
+      re-placements — so everything is dropped and lazily rebuilt from the
+      live engine.  Failures are rare events; correctness over cleverness.
     """
 
     __slots__ = ("ctx", "eng", "t_now", "grain", "t_hat_l", "pools", "cands",
                  "fresh", "min_new", "pid_col", "start_col", "dur_col",
-                 "cls_col")
+                 "cls_col", "persistent", "touched", "thresh", "needs_merge",
+                 "epoch")
 
     def __init__(self, ctx: "PlacementContext", t_now: float,
                  pid_col: np.ndarray, start_col: np.ndarray,
@@ -146,6 +178,138 @@ class _GroupPools:
         self.start_col = start_col
         self.dur_col = dur_col
         self.cls_col = cls_col
+        self.persistent = False
+        self.touched: Dict[int, list] = {}
+        self.thresh: Dict[int, Optional[tuple]] = {}
+        self.needs_merge: set = set()
+        self.epoch = 0
+
+    def begin_group(self, t_now: float, pid_col: np.ndarray,
+                    start_col: np.ndarray, dur_col: np.ndarray,
+                    cls_col: np.ndarray):
+        """Rebind the per-group output columns and reconcile the carried
+        pool state with everything the engine did since the last group."""
+        self.t_now = t_now
+        self.pid_col = pid_col
+        self.start_col = start_col
+        self.dur_col = dur_col
+        self.cls_col = cls_col
+        eng = self.eng
+        if eng.pool_epoch != self.epoch:
+            self.epoch = eng.pool_epoch
+            self.pools.clear()
+            self.cands.clear()
+            self.fresh.clear()
+            self.min_new.clear()
+            self.touched.clear()
+            self.thresh.clear()
+            self.needs_merge.clear()
+            eng.drain_offs()
+            return
+        # Unconsumed fresh splices may sit below any stream bound: convert
+        # them (by id) into touched entries for the merge.  Must happen
+        # BEFORE power-off deletions shift pool positions.
+        for c, fl in self.fresh.items():
+            if fl:
+                ids = self.pools[c][0]
+                self.touched.setdefault(c, []).append(
+                    ids[np.asarray(fl, dtype=np.int64)])
+                self.fresh[c] = []
+        offs = eng.drain_offs()
+        if offs:
+            self.apply_offs(offs)
+        for c in self.min_new:
+            self.min_new[c] = np.inf
+        self.needs_merge = set(self.cands)
+        for c in self.touched:
+            if c not in self.cands:
+                # No stream to reconcile against; a later build is full.
+                self.touched[c] = []
+
+    def apply_offs(self, sids):
+        """Cut the powered-off servers' contiguous pair blocks out of their
+        class pools (and shift/drop stream positions accordingly).  A
+        powered-on server always has its whole ``grain`` block in the pool,
+        so the whole batch is one keep-mask compaction per class — a
+        per-``sid`` slice shift is O(offs * pool) and collapses on diurnal
+        traces, where a falling edge powers off thousands of servers at
+        once.  Order-preserving, so it commutes with the loop form."""
+        grain = self.grain
+        eng = self.eng
+        multi = len(eng.classes) > 1
+        if multi:
+            by_class: Dict[int, list] = {}
+            for sid in sids:
+                by_class.setdefault(eng.server_class(sid), []).append(sid)
+        else:
+            by_class = {0: list(sids)}
+        for c, csids in by_class.items():
+            st = self.pools.get(c)
+            if st is None:
+                continue
+            ids, mus, n = st
+            live = ids[:n]
+            lo_id = np.asarray(sorted(csids), dtype=np.int64) * grain
+            lo = np.searchsorted(live, lo_id)
+            hi = np.searchsorted(live, lo_id + grain)
+            if not np.any(hi > lo):
+                continue
+            # Deleted-coverage mask over positions via a range-diff sweep.
+            diff = np.zeros(n + 1, dtype=np.int64)
+            np.add.at(diff, lo, 1)
+            np.add.at(diff, hi, -1)
+            dead = np.cumsum(diff[:n]) > 0
+            keep = ~dead
+            m = int(keep.sum())
+            if m == n:
+                continue
+            shift = np.cumsum(dead) - dead    # deleted positions before p
+            ids[:m] = live[keep]
+            mus[:m] = mus[:n][keep]
+            st[2] = m
+            cst = self.cands.get(c)
+            if cst is not None:
+                cp, cm = cst
+                km = keep[cp]
+                if not km.all():
+                    cp, cm = cp[km], cm[km]
+                self.cands[c] = [cp - shift[cp], cm]
+
+    def _merge_carry(self, c: int):
+        """Fold the touched pair ids back into class ``c``'s carried stream
+        at their current ``mu`` (dropping entries beyond the coverage
+        bound and pairs that left the pool), keeping ``(mu, pair id)``
+        order — position order == id order inside a pool."""
+        ids, mus, n = self.pools[c]
+        cp, cm = self.cands[c]
+        alive = mus[cp] == cm
+        if not alive.all():
+            cp, cm = cp[alive], cm[alive]
+        tl = self.touched.get(c)
+        if tl:
+            tids = np.unique(np.concatenate(
+                [np.atleast_1d(np.asarray(x, dtype=np.int64)) for x in tl]))
+            self.touched[c] = []
+            pos = np.searchsorted(ids[:n], tids)
+            ok = pos < n
+            pos = np.where(ok, pos, 0)
+            ok &= ids[pos] == tids
+            pos = pos[ok]
+            if pos.size:
+                tmu = mus[pos]
+                th = self.thresh.get(c)
+                if th is not None:
+                    t_mu, t_pid = th
+                    keep = (tmu < t_mu) | ((tmu == t_mu)
+                                           & (ids[pos] <= t_pid))
+                    pos, tmu = pos[keep], tmu[keep]
+                if pos.size:
+                    allp = np.concatenate([cp, pos])
+                    allm = np.concatenate([cm, tmu])
+                    o = np.lexsort((allp, allm))
+                    cp, cm = allp[o], allm[o]
+        st = self.cands[c] = [cp, cm]
+        return st
 
     def pool(self, c: int):
         """Compact (pair-id ascending) snapshot of the eligible pairs of
@@ -168,8 +332,36 @@ class _GroupPools:
         recorded mus), ordered by ``(mu, pair id)``."""
         ids, mus, n = self.pool(c)
         st = self.cands.get(c)
+        clean = False   # stream (re)built/merged this call -> fully alive
+        if st is not None and c in self.needs_merge:
+            self.needs_merge.discard(c)
+            st = self._merge_carry(c)
+            clean = True
+            if st[0].size < need and self.thresh.get(c) is not None:
+                # Carried stream exhausted below the ask while entries past
+                # its coverage bound exist: refresh with a full build.
+                st = None
+                del self.cands[c]
+            elif st[0].size > max(_STREAM_OVERSHOOT * need, 64):
+                # Keep the carried stream bounded: drop the sorted tail and
+                # *tighten* the coverage bound to the last kept entry (the
+                # dropped entries all compare greater, and any future mu
+                # move re-enters through the touched set) — without this a
+                # full-coverage stream (thresh None) re-absorbs every
+                # touched pair forever and the per-group merge degenerates
+                # into maintaining a whole sorted pool.
+                keep = max(_STREAM_OVERSHOOT * need, 64)
+                cp, cm = st[0][:keep], st[1][:keep]
+                self.thresh[c] = (float(cm[-1]), int(ids[cp[-1]]))
+                st = self.cands[c] = [cp, cm]
         if st is None:
-            kc = min(need, n)
+            # Persistent mode overshoots the ask: a stream of exactly
+            # ``need`` entries is fully consumed by its own group, which
+            # would force a rebuild every group and make the carry pure
+            # overhead.  The extra entries are the same frontier, just
+            # deeper — the return below still slices [:need].
+            kc = min(max(_STREAM_OVERSHOOT * need, 64)
+                     if self.persistent else need, n)
             m_live = mus[:n]
             if kc and kc < n:
                 part = np.argpartition(m_live, kc - 1)[:kc]
@@ -178,11 +370,18 @@ class _GroupPools:
             else:
                 cp = np.argsort(m_live, kind="stable")
             st = self.cands[c] = [cp, m_live[cp].copy()]
+            clean = True
+            if self.persistent:
+                self.thresh[c] = None if cp.size >= n else \
+                    (float(st[1][-1]), int(ids[cp[-1]]))
+                self.touched[c] = []
+                self.fresh.pop(c, None)
         cp, cm = st
-        alive = self.pools[c][1][cp] == cm        # assigned entries drop out
-        if not alive.all():
-            cp, cm = cp[alive], cm[alive]
-            self.cands[c] = [cp, cm]
+        if not clean:
+            alive = self.pools[c][1][cp] == cm    # assigned entries drop out
+            if not alive.all():
+                cp, cm = cp[alive], cm[alive]
+                self.cands[c] = [cp, cm]
         fr = self.fresh.get(c)
         if fr:
             fa = np.sort(np.asarray(fr, dtype=np.int64))
@@ -241,6 +440,8 @@ class _GroupPools:
             self.fresh.setdefault(c, []).extend(range(pos + 1, pos + grain))
         st[2] = n + grain
         mus[pos] = t_now + th                     # a fresh pair is free *now*
+        if self.persistent:
+            self.touched.setdefault(c, []).append(pid)
         if self.min_new[c] > t_now + th:
             self.min_new[c] = t_now + th
         self.pid_col[i] = pid
@@ -269,7 +470,8 @@ class PlacementContext:
                  readjust: bool = False,
                  assignments: Optional[List[cl.Assignment]] = None,
                  pending: Optional[List[PendingRow]] = None,
-                 order_cls: Optional[np.ndarray] = None):
+                 order_cls: Optional[np.ndarray] = None,
+                 incremental: bool = False):
         self.eng = eng
         self.cfgs = list(cfgs)
         self.deadline = np.asarray(deadline, dtype=np.float64)
@@ -282,6 +484,14 @@ class PlacementContext:
         self.primary = self.order_cls[0]
         self.grain = eng.l if eng.server_mode else 1
         self._pre = None
+        # Incremental mode (the pipelined online scheduler): pools and
+        # candidate streams persist across groups with delta reconciliation
+        # instead of a per-group rebuild; the engine logs power-offs for the
+        # deletion deltas.
+        self.incremental = bool(incremental)
+        self._gp: Optional[_GroupPools] = None
+        if self.incremental:
+            eng.track_offs = True
 
     @property
     def pre(self) -> dict:
@@ -290,6 +500,67 @@ class PlacementContext:
         if self._pre is None:
             self._pre = precompute(self.cfgs, self.order_cls)
         return self._pre
+
+    def update_tasks(self, idx):
+        """Refresh the :attr:`pre` lookups for the tasks in ``idx`` (an
+        index array, or a contiguous ``slice`` — what the pipelined driver
+        passes for slot-sorted traces) after their config columns were
+        filled in place (the pipelined config prefetch consumes Algorithm-1
+        solutions chunk by chunk).  The numpy entries of ``pre`` alias the
+        config arrays, so only the derived list mirrors and the stacked
+        record columns need resyncing — all mutated in place so aliases
+        held by a persistent pool stay live."""
+        if self._pre is None:
+            # First chunk: the plain build snapshots current (chunk-filled)
+            # values; unfilled tasks hold garbage until their own refresh.
+            self._pre = precompute(self.cfgs, self.order_cls)
+            return
+        pre = self._pre
+        for c, cfg in enumerate(self.cfgs):
+            pre["cols"][c][:, idx] = np.stack(
+                [np.asarray(cfg.v, np.float64)[idx],
+                 np.asarray(cfg.fc, np.float64)[idx],
+                 np.asarray(cfg.fm, np.float64)[idx],
+                 np.asarray(cfg.p_hat, np.float64)[idx],
+                 np.asarray(cfg.e_hat, np.float64)[idx]])
+            th = np.asarray(cfg.t_hat)[idx].tolist()
+            tm = np.asarray(cfg.t_min)[idx].tolist()
+            th_l = pre["t_hat_l"][c]
+            tm_l = pre["t_min_l"][c]
+            if isinstance(idx, slice):
+                th_l[idx] = th
+                tm_l[idx] = tm
+            else:
+                for j, i in enumerate(idx.tolist()):
+                    th_l[i] = th[j]
+                    tm_l[i] = tm[j]
+        if pre["order_cols"] is not None:
+            oc = self.order_cls[:, idx].T.tolist()
+            order_cols = pre["order_cols"]
+            if isinstance(idx, slice):
+                order_cols[idx] = oc
+            else:
+                for j, i in enumerate(idx.tolist()):
+                    order_cols[i] = oc[j]
+
+    def _group_pools(self, t_now: float, pid_col: np.ndarray,
+                     start_col: np.ndarray, dur_col: np.ndarray,
+                     cls_col: np.ndarray) -> _GroupPools:
+        """The per-call pool state: a throwaway instance normally, the
+        carried one (delta-reconciled) in incremental mode."""
+        if not self.incremental:
+            return _GroupPools(self, t_now, pid_col, start_col, dur_col,
+                               cls_col)
+        gp = self._gp
+        if gp is None:
+            gp = self._gp = _GroupPools(self, t_now, pid_col, start_col,
+                                        dur_col, cls_col)
+            gp.persistent = True
+            gp.epoch = self.eng.pool_epoch
+            self.eng.drain_offs()   # nothing existed to reconcile yet
+        else:
+            gp.begin_group(t_now, pid_col, start_col, dur_col, cls_col)
+        return gp
 
     def acquire_fresh(self, t_now: float, class_id: int) -> int:
         """A fresh pair of ``class_id`` through the engine-mode-appropriate
@@ -357,7 +628,40 @@ class PlacementContext:
         self.eng.sync_mu(pids, t_hat)
         self._gather(tids, pids, starts, t_hat, np.zeros(k, dtype=bool), cls)
 
-    def place_group_vector(self, idx, order, t_now: float):
+    def prepare_chunk(self, groups):
+        """Hoist the per-group prologue of :meth:`place_group_vector` for a
+        run of arrival groups (the pipelined driver's chunk): ONE stable
+        lexsort replaces each group's stable deadline argsort (equal
+        permutations — the group id is the primary key and lexsort keeps
+        arrival order on deadline ties, exactly like the per-group
+        ``kind="stable"`` argsort), and the task-column gathers vectorize
+        across the whole chunk.  Returns one ``(gidx, prim, d, t_hat)``
+        tuple per group, each bit-identical to the inline prologue."""
+        sizes = [idx.shape[0] for _, idx in groups]
+        cat = np.concatenate([idx for _, idx in groups])
+        gid = np.repeat(np.arange(len(sizes)), sizes)
+        d_cat = self.deadline[cat]
+        order = np.lexsort((d_cat, gid))
+        gidx = cat[order]
+        d_s = d_cat[order]
+        prim = self.primary[gidx]
+        pre = self.pre
+        if len(self.cfgs) == 1:
+            t_hat = pre["t_hat"][0][gidx]
+        else:
+            t_hat = np.empty(gidx.shape[0])
+            for c in np.unique(prim):
+                m = prim == c
+                t_hat[m] = pre["t_hat"][int(c)][gidx[m]]
+        out = []
+        off = 0
+        for s in sizes:
+            sl = slice(off, off + s)
+            out.append((gidx[sl], prim[sl], d_s[sl], t_hat[sl]))
+            off += s
+        return out
+
+    def place_group_vector(self, idx, order, t_now: float, prep=None):
         """Batched worst-fit/SPT (+ θ-readjustment) placement for one
         ordered group — Algorithm 2/5's pair rule.
 
@@ -370,14 +674,25 @@ class PlacementContext:
         rest of the group runs the same scalar rule as a tight loop over
         the pools with a lazy frontier heap.  Bit-identical to
         :meth:`place_group_scalar` (rule ``"wf"``) by construction.
+
+        ``prep`` injects the group's :meth:`prepare_chunk` tuple; ``idx``
+        and ``order`` are ignored then (the tuple already IS the ordered
+        group).
         """
-        k = order.shape[0]
-        if k == 0:
-            return
-        pre = self.pre
-        gidx = np.asarray(idx)[order]             # [k] task ids, batch order
-        prim = self.primary[gidx]                 # [k] primary class per task
-        d = self.deadline[gidx]
+        if prep is not None:
+            gidx, prim, d, t_hat = prep
+            k = gidx.shape[0]
+            if k == 0:
+                return
+            pre = self.pre
+        else:
+            k = order.shape[0]
+            if k == 0:
+                return
+            pre = self.pre
+            gidx = np.asarray(idx)[order]         # [k] task ids, batch order
+            prim = self.primary[gidx]             # [k] primary class per task
+            d = self.deadline[gidx]
         theta = self.theta
         readjust_on = self.readjust
         pending = self.pending
@@ -391,10 +706,11 @@ class PlacementContext:
         # Per-group record columns, filled by the batch rounds and the
         # scalar violators; records and engine state are committed once at
         # the end.
-        t_hat = np.empty(k)
-        for c in np.unique(prim):
-            m = prim == c
-            t_hat[m] = t_hat_cls[int(c)][gidx[m]]
+        if prep is None:
+            t_hat = np.empty(k)
+            for c in np.unique(prim):
+                m = prim == c
+                t_hat[m] = t_hat_cls[int(c)][gidx[m]]
         pid_col = np.empty(k, dtype=np.int64)
         start_col = np.empty(k)
         dur_col = t_hat.copy()
@@ -402,12 +718,14 @@ class PlacementContext:
         readj_col = np.zeros(k, dtype=bool)
         base = len(self.assignments)
 
-        gp = _GroupPools(self, t_now, pid_col, start_col, dur_col, cls_col)
+        gp = self._group_pools(t_now, pid_col, start_col, dur_col, cls_col)
         pool = gp.pool
         candidates = gp.candidates
         pools = gp.pools
         fresh = gp.fresh
         min_new = gp.min_new
+        persistent = gp.persistent
+        touched = gp.touched
 
         valid = np.empty(k, dtype=bool)
         pos_sel = np.empty(k, dtype=np.int64)
@@ -473,6 +791,8 @@ class PlacementContext:
                 new_mu = start_col[m] + dur_col[m]
                 mus[pos] = new_mu
                 pid_col[m] = ids[pos]
+                if persistent:
+                    touched.setdefault(int(c), []).append(pid_col[m].copy())
                 min_new[int(c)] = min(min_new[int(c)], float(new_mu.min()))
             for i in np.flatnonzero(readj_col[pos0:cut]).tolist():
                 i += pos0
@@ -497,6 +817,8 @@ class PlacementContext:
                 th = t_hat_l[c][g]
                 if dd - start >= th - _EPS:
                     mus[j] = start + th
+                    if persistent:
+                        touched.setdefault(c, []).append(int(ids[j]))
                     if min_new[c] > start + th:
                         min_new[c] = start + th
                     pid_col[i], start_col[i], dur_col[i], cls_col[i] = \
@@ -510,6 +832,8 @@ class PlacementContext:
                     window = dd - start
                     if window >= t_theta - _EPS:
                         mus[j] = start + window
+                        if persistent:
+                            touched.setdefault(c, []).append(int(ids[j]))
                         if min_new[c] > start + window:
                             min_new[c] = start + window
                         pending.append((base + i, g, window, c))
@@ -630,6 +954,9 @@ class PlacementContext:
             start_col[i0:] = st_l
             dur_col[i0:] = du_l
             readj_col[i0:] = rj_l
+            if persistent and pid_l:
+                touched.setdefault(0, []).append(
+                    np.asarray(pid_l, dtype=np.int64))
 
         def finish_offline(i0: int):
             """The offline (single-class, ``grain == 1``) specialization of
@@ -755,8 +1082,10 @@ class PlacementContext:
         start_col = np.empty(k)
         dur_col = np.empty(k)
         cls_col = np.empty(k, dtype=np.int64)
-        gp = _GroupPools(self, t_now, pid_col, start_col, dur_col, cls_col)
+        gp = self._group_pools(t_now, pid_col, start_col, dur_col, cls_col)
         pool = gp.pool
+        persistent = gp.persistent
+        touched = gp.touched
 
         for i in range(k):
             g = gl[i]
@@ -780,6 +1109,8 @@ class PlacementContext:
                         continue
                 start = float(starts[j])
                 mus[j] = start + th
+                if persistent:
+                    touched.setdefault(c, []).append(int(ids[j]))
                 pid_col[i] = ids[j]
                 start_col[i] = start
                 dur_col[i] = th

@@ -260,13 +260,20 @@ def pad_pow2(params: DvfsParams, allowed, extra_rows: np.ndarray = None):
 
 
 def config_from_solution(sol: DvfsSolution, params: DvfsParams, allowed,
-                         interval: ScalingInterval) -> TaskConfig:
+                         interval: ScalingInterval,
+                         tmin: np.ndarray = None) -> TaskConfig:
     """TaskConfig assembly shared by :func:`configure_tasks` and the
     heterogeneous class path (``machines.configure_classes``): the t_min
     floor plus snapping the deadline-boundary f32 residual to ``allowed``
-    so downstream deadline checks are exact."""
+    so downstream deadline checks are exact.
+
+    ``tmin`` short-circuits the :func:`repro.core.dvfs.min_time` call when
+    the caller already holds it — the pipelined online path computes the
+    whole horizon's floors once up front and passes per-chunk slices
+    (``min_time`` is elementwise, so slices are bitwise equal)."""
     sol = DvfsSolution(*(np.asarray(f) for f in sol))
-    tmin = np.asarray(dvfs.min_time(params, interval))
+    if tmin is None:
+        tmin = np.asarray(dvfs.min_time(params, interval))
     allowed_arr = np.broadcast_to(np.asarray(allowed, np.float64),
                                   sol.time.shape)
     t_hat = np.where(sol.deadline_prior & sol.feasible,
@@ -348,6 +355,56 @@ def _dedup_solve(params: DvfsParams, allowed, interval: ScalingInterval,
     rows = solver_cache.solve_rows(keys, solve,
                                    tag="jnp-bd" if boundary else "jnp-dl")
     return solver_cache.rows_to_solution(rows)
+
+
+def solve_rows_async(params: DvfsParams, allowed,
+                     interval: ScalingInterval, *, boundary: bool,
+                     use_kernel: bool = False, dedup: bool = True):
+    """Dispatch one solve batch without blocking — the pipelined online
+    scheduler's per-chunk entry point.
+
+    Builds the f32 key matrix, probes the cache, and dispatches only the
+    misses; returns a :class:`repro.core.solver_cache.AsyncSolve` whose
+    ``.result()`` is bit-identical to the synchronous
+    :func:`configure_tasks` / :func:`readjust_batch` solves (same tags, so
+    the cache composes across both paths).  The jnp path keeps the result
+    on device by stacking the solution columns eagerly (dispatch, not
+    compute); the kernel path defers via ``dvfs_solve_matrix(block=False)``.
+
+    Chunks skip the sort-based intra-batch unique pass
+    (``solve_rows_async(unique=False)``): online chunks are nearly
+    duplicate-free, so the cache probe alone carries the dedup and
+    cross-chunk repeats still hit.
+    """
+    from repro.core import solver_cache
+
+    keys = solver_cache.build_keys(
+        params.astuple(), allowed, boundary,
+        np.asarray(interval.bounds(), np.float32))
+    cache = solver_cache.GLOBAL_CACHE if dedup else None
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        from repro.kernels.dvfs_opt import DEFAULT_GRID
+
+        tag = f"k{int(DEFAULT_GRID[0])}x{int(DEFAULT_GRID[1])}"
+
+        def solve(km: np.ndarray):
+            return kernel_ops.dvfs_solve_matrix(km, block=False)
+
+    else:
+        tag = "jnp-bd" if boundary else "jnp-dl"
+        solver = solve_on_boundary if boundary else solve_with_deadline
+
+        def solve(km: np.ndarray):
+            p = DvfsParams(*(km[:, i] for i in range(layout.N_PARAMS)))
+            sol = solver(p, km[:, layout.ALLOWED], interval)
+            # Device-side stack: pure data movement (bitwise equal to the
+            # host-side ``solution_to_rows``), so the host never waits here.
+            return jnp.stack(
+                [jnp.asarray(f, jnp.float32) for f in sol], axis=1)
+
+    return solver_cache.solve_rows_async(keys, solve, tag=tag, cache=cache,
+                                         unique=False)
 
 
 def configure_tasks(params: DvfsParams, allowed, interval: ScalingInterval = dvfs.WIDE,

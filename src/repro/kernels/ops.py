@@ -69,7 +69,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
 
 def dvfs_solve_matrix(mat: np.ndarray, *, grid: tuple = DEFAULT_GRID,
                       interpret: Optional[bool] = None,
-                      shard: bool = True) -> np.ndarray:
+                      shard: bool = True, block: bool = True):
     """Dispatch a ``[m, 16]`` (or ``[m, 13]`` key-layout) task matrix to the
     Pallas solver, sharded across local devices when it pays off.
 
@@ -80,6 +80,12 @@ def dvfs_solve_matrix(mat: np.ndarray, *, grid: tuple = DEFAULT_GRID,
     the solver is row-independent.  Falls back to one local dispatch when
     there is a single device or the batch is under ``SHARD_MIN_ROWS``.
     Returns the ``[m, 8]`` solution matrix as numpy.
+
+    ``block=False`` is the pipelined-scheduler entry point: the kernel is
+    dispatched but the host does NOT wait for it — the return value is the
+    in-flight device array (single device) or a zero-arg callable that
+    gathers the per-device parts when invoked.  Either form is what
+    ``solver_cache._materialize`` consumes at the pipeline's sync point.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -96,8 +102,9 @@ def dvfs_solve_matrix(mat: np.ndarray, *, grid: tuple = DEFAULT_GRID,
         while nd > 1 and -(-m // nd) < BT:
             nd //= 2
     if nd == 1:
-        return np.asarray(dvfs_solve_kernel(jnp.asarray(mat), grid=grid,
-                                            interpret=interpret))
+        fut = dvfs_solve_kernel(jnp.asarray(mat), grid=grid,
+                                interpret=interpret)
+        return np.asarray(fut) if block else fut
     per_dev = -(-m // nd)
     chunk = -(-per_dev // BT) * BT  # whole kernel blocks per device
     if nd * chunk != m:
@@ -108,7 +115,11 @@ def dvfs_solve_matrix(mat: np.ndarray, *, grid: tuple = DEFAULT_GRID,
                                 devs[i]),
                  grid=grid, interpret=interpret)
              for i in range(nd)]  # dispatches are async; concat blocks
-    return np.concatenate([np.asarray(p) for p in parts], axis=0)[:m]
+
+    def gather() -> np.ndarray:
+        return np.concatenate([np.asarray(p) for p in parts], axis=0)[:m]
+
+    return gather() if block else gather
 
 
 def dvfs_solve(params: DvfsParams, allowed: np.ndarray,

@@ -192,6 +192,55 @@ def test_determinism_static_conditional_in_kernel_body_ok():
                     select=["determinism"]) == []
 
 
+PREFETCH_SRC = ("import numpy as np\n"
+                "# lint: prefetch-region-begin\n"
+                "{body}"
+                "# lint: prefetch-region-end\n")
+
+
+def test_determinism_flags_blocking_asarray_in_prefetch_region():
+    src = PREFETCH_SRC.format(body=(
+        "def consume(handle):\n"
+        "    return np.asarray(handle)\n"))
+    fs = findings(src, module="repro.core.online", select=["determinism"])
+    assert rules_of(fs) == {"determinism"}
+    assert "prefetch region" in fs[0].message
+
+
+def test_determinism_flags_block_until_ready_in_prefetch_region():
+    src = PREFETCH_SRC.format(body=(
+        "def drain(rows):\n"
+        "    rows.block_until_ready()\n"))
+    fs = findings(src, module="repro.core.online", select=["determinism"])
+    assert rules_of(fs) == {"determinism"}
+    assert "block_until_ready" in fs[0].message
+
+
+def test_determinism_flags_device_get_in_prefetch_region():
+    src = PREFETCH_SRC.format(body=(
+        "import jax\n"
+        "def peek(x):\n"
+        "    return jax.device_get(x)\n"))
+    fs = findings(src, module="repro.core.online", select=["determinism"])
+    assert rules_of(fs) == {"determinism"}
+
+
+def test_determinism_sync_suffixed_method_may_block_in_region():
+    src = PREFETCH_SRC.format(body=(
+        "def consume_sync(handle):\n"
+        "    return np.asarray(handle)\n"))
+    assert findings(src, module="repro.core.online",
+                    select=["determinism"]) == []
+
+
+def test_determinism_blocking_call_outside_region_ok():
+    src = ("import numpy as np\n"
+           "def f(x):\n"
+           "    return np.asarray(x)\n")
+    assert findings(src, module="repro.core.online",
+                    select=["determinism"]) == []
+
+
 # ---------------------------------------------------------------------------
 # dtype-discipline
 # ---------------------------------------------------------------------------
