@@ -137,12 +137,13 @@ def online_configs(task_set: TaskSet, mcs, use_dvfs: bool = True,
     return machines.default_configs(task_set, mcs, allowed=allowed)
 
 
-# lint: prefetch-region-begin
-#
-# Everything between these markers runs with a solve batch in flight.
-# Host<->device sync points are confined to methods whose name ends in
-# ``_sync`` — tools/lint flags any other blocking call (np.asarray /
-# jax.device_get / .block_until_ready) inside the region.
+# The pipelined driver below runs with a solve batch in flight.  Host<->
+# device sync points are confined to methods whose name ends in ``_sync``;
+# the ``async-protocol`` lint family derives the in-flight window from the
+# dispatch sites by dataflow and flags any other blocking call
+# (np.asarray / jax.device_get / .block_until_ready) inside it, plus
+# dropped/double-consumed AsyncSolve handles and reads of the full-horizon
+# views before the sync point.
 
 #: Target chunk size (tasks) for the pipelined driver: whole arrival groups
 #: are accumulated until the count reaches this.  Large enough that one
@@ -368,8 +369,6 @@ def _drive_pipelined(groups, state: Optional[_PipelineState],
         else:
             for slot, idx in ch:
                 place_group(slot, idx)
-
-# lint: prefetch-region-end
 
 
 def schedule_online(task_set: TaskSet, l: int = 1, theta: float = 1.0,

@@ -1,0 +1,262 @@
+"""Units for the CFG + forward-dataflow framework behind the flow-sensitive
+lint families (tools/lint/flow.py): CFG construction for every statement
+shape the rules must traverse, reaching-definitions fixpoint convergence,
+and the layout.py symbolic slice-bound resolver."""
+
+import ast
+
+from tools.lint.flow import (
+    build_cfg, layout_env, reaching_definitions, resolve_col_expr,
+    run_forward, statement_states, stmt_exprs,
+)
+
+
+def _cfg_of(src: str):
+    fn = ast.parse(src).body[0]
+    assert isinstance(fn, ast.FunctionDef)
+    return build_cfg(fn)
+
+
+def _stmt_lines(cfg):
+    """block id -> line numbers of its statements (reachable blocks)."""
+    return {b.id: [s.lineno for s in b.stmts]
+            for b in cfg.blocks if b.id in cfg.reachable() and b.stmts}
+
+
+# ---------------------------------------------------------------------------
+# CFG construction
+# ---------------------------------------------------------------------------
+
+def test_linear_body_single_path():
+    cfg = _cfg_of("def f():\n    a = 1\n    b = a\n    return b\n")
+    # Entry flows through one statement-bearing chain into exit.
+    assert cfg.exit in {s for b in cfg.blocks for s in b.succs}
+    reach = cfg.reachable()
+    assert cfg.entry in reach and cfg.exit in reach
+    stmts = [s for b in cfg.blocks for s in b.stmts]
+    assert len(stmts) == 3
+
+
+def test_if_elif_else_all_paths_reach_exit():
+    cfg = _cfg_of(
+        "def f(x):\n"
+        "    if x == 1:\n"
+        "        a = 1\n"
+        "    elif x == 2:\n"
+        "        a = 2\n"
+        "    else:\n"
+        "        a = 3\n"
+        "    return a\n")
+    reach = cfg.reachable()
+    assert cfg.exit in reach
+    # All three assignment statements live in distinct reachable blocks.
+    assign_blocks = {b.id for b in cfg.blocks
+                     if any(isinstance(s, ast.Assign) for s in b.stmts)}
+    assert len(assign_blocks) == 3
+    assert assign_blocks <= reach
+
+
+def test_while_loop_has_back_edge():
+    cfg = _cfg_of(
+        "def f(n):\n"
+        "    i = 0\n"
+        "    while i < n:\n"
+        "        i = i + 1\n"
+        "    return i\n")
+    header = next(b.id for b in cfg.blocks
+                  if any(isinstance(s, ast.While) for s in b.stmts))
+    body = next(b.id for b in cfg.blocks
+                if any(isinstance(s, ast.Assign) and s.lineno == 4
+                       for s in b.stmts))
+    assert header in cfg.blocks[body].succs      # back edge
+    assert body in cfg.blocks[header].succs      # loop entry
+
+
+def test_for_break_continue_edges():
+    cfg = _cfg_of(
+        "def f(xs):\n"
+        "    for x in xs:\n"
+        "        if x < 0:\n"
+        "            break\n"
+        "        if x == 0:\n"
+        "            continue\n"
+        "        y = x\n"
+        "    return 1\n")
+    header = next(b.id for b in cfg.blocks
+                  if any(isinstance(s, ast.For) for s in b.stmts))
+    brk = next(b.id for b in cfg.blocks
+               if any(isinstance(s, ast.Break) for s in b.stmts))
+    cnt = next(b.id for b in cfg.blocks
+               if any(isinstance(s, ast.Continue) for s in b.stmts))
+    # continue jumps to the loop header; break jumps past it (to the block
+    # holding the return, directly or transitively).
+    assert header in cfg.blocks[cnt].succs
+    assert header not in cfg.blocks[brk].succs
+    assert cfg.blocks[brk].succs  # lands on the after-loop path
+
+
+def test_early_return_terminates_path():
+    cfg = _cfg_of(
+        "def f(x):\n"
+        "    if x:\n"
+        "        return 1\n"
+        "    y = 2\n"
+        "    return y\n")
+    ret_block = next(b for b in cfg.blocks
+                     if any(isinstance(s, ast.Return) and s.lineno == 3
+                            for s in b.stmts))
+    assert ret_block.succs == [cfg.exit]
+
+
+def test_try_except_handler_reachable():
+    cfg = _cfg_of(
+        "def f(x):\n"
+        "    try:\n"
+        "        a = risky(x)\n"
+        "    except ValueError:\n"
+        "        a = 0\n"
+        "    return a\n")
+    reach = cfg.reachable()
+    handler = next(b.id for b in cfg.blocks
+                   if any(isinstance(s, ast.Assign) and s.lineno == 5
+                          for s in b.stmts))
+    assert handler in reach
+    assert cfg.exit in reach
+
+
+def test_nested_function_is_opaque():
+    cfg = _cfg_of(
+        "def f():\n"
+        "    def g():\n"
+        "        return 1\n"
+        "    return g\n")
+    # The nested def is one opaque statement; its body contributes no
+    # blocks and no owned expressions.
+    defs = [s for b in cfg.blocks for s in b.stmts
+            if isinstance(s, ast.FunctionDef)]
+    assert len(defs) == 1
+    assert stmt_exprs(defs[0]) == []
+
+
+# ---------------------------------------------------------------------------
+# Fixpoint / reaching definitions
+# ---------------------------------------------------------------------------
+
+def test_reaching_definitions_diamond_merges_both_arms():
+    cfg = _cfg_of(
+        "def f(c):\n"
+        "    if c:\n"
+        "        x = 1\n"
+        "    else:\n"
+        "        x = 2\n"
+        "    return x\n")
+    entry = reaching_definitions(cfg)
+    ret_bid = next(b.id for b in cfg.blocks
+                   if any(isinstance(s, ast.Return) for s in b.stmts))
+    xdefs = {line for name, line in entry[ret_bid] if name == "x"}
+    assert xdefs == {3, 5}
+
+
+def test_reaching_definitions_redefinition_kills():
+    cfg = _cfg_of(
+        "def f():\n"
+        "    x = 1\n"
+        "    x = 2\n"
+        "    return x\n")
+    states = {}
+    for state, stmt in statement_states(
+            cfg, {cfg.entry: frozenset()},
+            lambda s, st: s):  # identity transfer just to walk
+        states[stmt.lineno] = state
+    entry = reaching_definitions(cfg)
+    # At exit, only the later definition survives.
+    exit_preds = cfg.preds(cfg.exit)
+    assert exit_preds
+    # Walk the defining block manually: the kill happens inside one block,
+    # so check the function-level result via a loop-carried variant below.
+    cfg2 = _cfg_of(
+        "def f(n):\n"
+        "    x = 1\n"
+        "    while n:\n"
+        "        x = 2\n"
+        "    return x\n")
+    entry2 = reaching_definitions(cfg2)
+    ret_bid = next(b.id for b in cfg2.blocks
+                   if any(isinstance(s, ast.Return) for s in b.stmts))
+    xdefs = {line for name, line in entry2[ret_bid] if name == "x"}
+    assert xdefs == {2, 4}  # zero-iteration path keeps line 2 alive
+
+
+def test_fixpoint_converges_on_nested_loops():
+    cfg = _cfg_of(
+        "def f(n):\n"
+        "    s = 0\n"
+        "    for i in range(n):\n"
+        "        for j in range(i):\n"
+        "            s = s + j\n"
+        "    return s\n")
+    entry = reaching_definitions(cfg)  # must terminate
+    ret_bid = next(b.id for b in cfg.blocks
+                   if any(isinstance(s, ast.Return) for s in b.stmts))
+    sdefs = {line for name, line in entry[ret_bid] if name == "s"}
+    assert sdefs == {2, 5}
+
+
+def test_run_forward_must_join_loop():
+    # A must-analysis (all-paths) over a loop converges and the
+    # conditional arm does not leak into the join.
+    src = ("def f(c):\n"
+           "    mark()\n"
+           "    if c:\n"
+           "        clear()\n"
+           "    tail()\n")
+    cfg = _cfg_of(src)
+
+    def transfer(state, stmt):
+        calls = [n.func.id for e in stmt_exprs(stmt)
+                 for n in ast.walk(e)
+                 if isinstance(n, ast.Call) and isinstance(n.func, ast.Name)]
+        if "mark" in calls:
+            return True
+        if "clear" in calls:
+            return False
+        return state
+
+    entry = run_forward(cfg, False, transfer, lambda xs: all(xs))
+    tail_state = None
+    for state, stmt in statement_states(cfg, entry, transfer):
+        if isinstance(stmt, ast.Expr) and stmt.lineno == 5:
+            tail_state = state
+    assert tail_state is False  # cleared on one path => not "must" marked
+
+
+# ---------------------------------------------------------------------------
+# layout.py slice-bound resolution
+# ---------------------------------------------------------------------------
+
+def test_layout_env_exposes_schema_constants():
+    env = layout_env()
+    assert env["NCOL"] == 16 and env["KEY_COLS"] == 13
+    assert env["PARAMS_SLICE"] == slice(0, env["N_PARAMS"])
+
+
+def _span(src: str, width=None):
+    expr = ast.parse(src, mode="eval").body
+    return resolve_col_expr(expr, layout_env(), width)
+
+
+def test_resolve_col_expr_forms():
+    env = layout_env()
+    assert _span("3") == (3, 4)
+    assert _span("ALLOWED") == (env["ALLOWED"], env["ALLOWED"] + 1)
+    assert _span("layout.READJUST") == (env["READJUST"],
+                                        env["READJUST"] + 1)
+    assert _span("col(T0)") == (env["T0"], env["T0"] + 1)
+    assert _span("PARAMS_SLICE") == (0, env["N_PARAMS"])
+    assert _span("NCOL - KEY_COLS") == (3, 4)
+    assert _span("unknown_name") is None
+    # Slices resolve through names; open ends use 0 / the given width.
+    sl = ast.parse("x[V_MIN:FM_MAX]", mode="eval").body.slice
+    assert resolve_col_expr(sl, env) == (env["V_MIN"], env["FM_MAX"])
+    sl_open = ast.parse("x[:KEY_COLS]", mode="eval").body.slice
+    assert resolve_col_expr(sl_open, env, 16) == (0, env["KEY_COLS"])

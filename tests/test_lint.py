@@ -2,9 +2,13 @@
 suppression mechanism, the layer-DAG data, and a self-check that the repo
 itself lints clean.
 
-Every rule family gets at least one fixture that MUST fail and one that
-MUST pass, so a rule that silently stops firing (or starts flagging idiom
-the repo depends on) breaks this gate, not a future refactor.
+Every rule family — including the flow-sensitive tier (pallas-hazard,
+async-protocol, shape-flow) — gets at least one fixture that MUST fail and
+one that MUST pass, so a rule that silently stops firing (or starts
+flagging idiom the repo depends on) breaks this gate, not a future
+refactor.  The differential mutation corpus (tools/lint/selfcheck.py) is
+parametrized in at the bottom: every seeded bug in a copy of the real
+sources must be caught by the expected rule.
 """
 
 import json
@@ -14,7 +18,7 @@ import sys
 
 import pytest
 
-from tools.lint import layer_dag, lint_source
+from tools.lint import layer_dag, lint_source, selfcheck
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -192,53 +196,249 @@ def test_determinism_static_conditional_in_kernel_body_ok():
                     select=["determinism"]) == []
 
 
-PREFETCH_SRC = ("import numpy as np\n"
-                "# lint: prefetch-region-begin\n"
-                "{body}"
-                "# lint: prefetch-region-end\n")
+# ---------------------------------------------------------------------------
+# pallas-hazard (flow-sensitive)
+# ---------------------------------------------------------------------------
 
 
-def test_determinism_flags_blocking_asarray_in_prefetch_region():
-    src = PREFETCH_SRC.format(body=(
-        "def consume(handle):\n"
-        "    return np.asarray(handle)\n"))
-    fs = findings(src, module="repro.core.online", select=["determinism"])
-    assert rules_of(fs) == {"determinism"}
-    assert "prefetch region" in fs[0].message
+def _pallas_module(kernel: str) -> str:
+    """A kernel body plus the pallas_call site that classifies its refs:
+    one input ref of width NCOL, one output ref of width SOL_COLS."""
+    return (
+        "import functools\n"
+        "from jax.experimental import pallas as pl\n"
+        "from repro.kernels.layout import (\n"
+        "    NCOL, SOL_COLS, ALLOWED, FM_MAX, PARAMS_SLICE, col)\n"
+        + kernel +
+        "def run(tasks):\n"
+        "    return pl.pallas_call(\n"
+        "        functools.partial(_kernel),\n"
+        "        in_specs=[pl.BlockSpec((8, NCOL), lambda i: (i, 0))],\n"
+        "        out_specs=pl.BlockSpec((8, SOL_COLS), lambda i: (i, 0)),\n"
+        "    )(tasks)\n")
 
 
-def test_determinism_flags_block_until_ready_in_prefetch_region():
-    src = PREFETCH_SRC.format(body=(
-        "def drain(rows):\n"
-        "    rows.block_until_ready()\n"))
-    fs = findings(src, module="repro.core.online", select=["determinism"])
-    assert rules_of(fs) == {"determinism"}
-    assert "block_until_ready" in fs[0].message
+def hazards(kernel):
+    return findings(_pallas_module(kernel), module="repro.kernels.dvfs_opt",
+                    select=["pallas-hazard"])
 
 
-def test_determinism_flags_device_get_in_prefetch_region():
-    src = PREFETCH_SRC.format(body=(
-        "import jax\n"
-        "def peek(x):\n"
-        "    return jax.device_get(x)\n"))
-    fs = findings(src, module="repro.core.online", select=["determinism"])
-    assert rules_of(fs) == {"determinism"}
+def test_pallas_hazard_flags_read_after_write():
+    fs = hazards("def _kernel(tasks_ref, out_ref):\n"
+                 "    out_ref[...] = tasks_ref[...] * 2.0\n"
+                 "    y = out_ref[...] + 1.0\n"
+                 "    out_ref[...] = y\n")
+    assert rules_of(fs) == {"pallas-hazard"}
+    assert any("read-after-write" in f.message for f in fs)
 
 
-def test_determinism_sync_suffixed_method_may_block_in_region():
-    src = PREFETCH_SRC.format(body=(
-        "def consume_sync(handle):\n"
-        "    return np.asarray(handle)\n"))
-    assert findings(src, module="repro.core.online",
-                    select=["determinism"]) == []
+def test_pallas_hazard_flags_store_to_input_ref():
+    fs = hazards("def _kernel(tasks_ref, out_ref):\n"
+                 "    t = tasks_ref[...]\n"
+                 "    out_ref[...] = t\n"
+                 "    tasks_ref[...] = t * 2.0\n")
+    assert rules_of(fs) == {"pallas-hazard"}
+    assert any("store to input ref tasks_ref" in f.message for f in fs)
 
 
-def test_determinism_blocking_call_outside_region_ok():
+def test_pallas_hazard_flags_partial_write_after_read():
+    fs = hazards("def _kernel(tasks_ref, out_ref):\n"
+                 "    acc = out_ref[...]\n"
+                 "    out_ref[:, col(0)] = acc[:, col(0)] * 2.0\n")
+    assert any("write-after-read" in f.message for f in fs)
+
+
+def test_pallas_hazard_flags_group_cross_and_oob_columns():
+    fs = hazards("def _kernel(tasks_ref, out_ref):\n"
+                 "    t = tasks_ref[...]\n"
+                 "    bad = t[:, ALLOWED:FM_MAX]\n"
+                 "    oob = t[:, NCOL]\n"
+                 "    out_ref[...] = t * 0.0\n")
+    msgs = " | ".join(f.message for f in fs)
+    assert "crosses a layout.py column-group boundary" in msgs
+    assert "out of bounds" in msgs
+
+
+def test_pallas_hazard_clean_kernel_idiom_passes():
+    # Full-ref load with .astype, whole-group column reads, same-statement
+    # RMW on the output ref: the idiom every shipped kernel uses.
+    fs = hazards("def _kernel(tasks_ref, out_ref):\n"
+                 "    t = tasks_ref[...].astype(out_ref.dtype)\n"
+                 "    p = t[:, PARAMS_SLICE]\n"
+                 "    a = t[:, col(ALLOWED)]\n"
+                 "    out_ref[...] = out_ref[...] * 0.0 + 1.0\n")
+    assert fs == []
+
+
+def test_pallas_hazard_barrier_clears_hazard_state():
+    fs = hazards("def _kernel(tasks_ref, out_ref):\n"
+                 "    out_ref[...] = tasks_ref[...] * 2.0\n"
+                 "    pl.debug_barrier()\n"
+                 "    y = out_ref[...] + 1.0\n"
+                 "    out_ref[...] = y\n")
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# async-protocol (flow-sensitive; retires the prefetch-region markers)
+# ---------------------------------------------------------------------------
+
+
+def protocol(src):
+    return findings(src, module="repro.core.online",
+                    select=["async-protocol"])
+
+
+def test_async_protocol_flags_dropped_handle():
+    fs = protocol("def fetch(keys, solve):\n"
+                  "    handle = solve_rows_async(keys, solve)\n"
+                  "    return None\n")
+    assert rules_of(fs) == {"async-protocol"}
+    assert "never reaches result()" in fs[0].message
+
+
+def test_async_protocol_flags_rebind_of_live_handle():
+    fs = protocol("def fetch(keys, more, solve):\n"
+                  "    handle = solve_rows_async(keys, solve)\n"
+                  "    handle = solve_rows_async(more, solve)\n"
+                  "    return handle.result()\n")
+    assert any("rebound while it may still hold a live" in f.message
+               for f in fs)
+
+
+def test_async_protocol_flags_double_consume():
+    fs = protocol("def fetch(keys, solve):\n"
+                  "    handle = solve_rows_async(keys, solve)\n"
+                  "    first = handle.result()\n"
+                  "    return handle.result()\n")
+    assert any("already be consumed" in f.message for f in fs)
+
+
+def test_async_protocol_consume_and_escape_pass():
+    src = ("def fetch(keys, solve):\n"
+           "    handle = solve_rows_async(keys, solve)\n"
+           "    return handle.result()\n"
+           "def hand_off(keys, solve, batches):\n"
+           "    handle = solve_rows_async(keys, solve)\n"
+           "    batches.append((keys, handle))\n"
+           "def conditional(keys, solve, want):\n"
+           "    handle = solve_rows_async(keys, solve) if want else None\n"
+           "    if handle is not None:\n"
+           "        consume_sync(handle)\n")
+    assert protocol(src) == []
+
+
+def test_async_protocol_flags_blocking_call_in_window():
+    fs = protocol("import numpy as np\n"
+                  "def drive(state, chunks):\n"
+                  "    for span in chunks:\n"
+                  "        state.dispatch(span)\n"
+                  "    rows = np.asarray(chunks)\n"
+                  "    return rows\n")
+    assert rules_of(fs) == {"async-protocol"}
+    assert "blocks on device results" in fs[0].message
+
+
+def test_async_protocol_blocking_before_dispatch_and_in_sync_fn_pass():
     src = ("import numpy as np\n"
-           "def f(x):\n"
-           "    return np.asarray(x)\n")
-    assert findings(src, module="repro.core.online",
-                    select=["determinism"]) == []
+           "def drive(state, chunks):\n"
+           "    arr = np.asarray(chunks)\n"
+           "    state.dispatch(arr)\n"
+           "def consume_sync(state, handle):\n"
+           "    state.dispatch(handle)\n"
+           "    return np.asarray(handle)\n")
+    assert protocol(src) == []
+
+
+def test_async_protocol_flags_view_read_before_sync():
+    fs = protocol("def drive(state, ctx, spans):\n"
+                  "    handle = state.dispatch(spans[0])\n"
+                  "    ctx.update_tasks(spans[0])\n"
+                  "    state.consume_sync(handle, spans[0])\n")
+    assert any("full-horizon view" in f.message for f in fs)
+
+
+def test_async_protocol_view_read_after_sync_passes():
+    src = ("def drive(state, ctx, spans):\n"
+           "    handle = state.dispatch(spans[0])\n"
+           "    state.consume_sync(handle, spans[0])\n"
+           "    ctx.update_tasks(spans[0])\n")
+    assert protocol(src) == []
+
+
+def test_async_protocol_flags_retired_prefetch_marker():
+    fs = protocol("# lint: prefetch-region-begin\nx = 1\n")
+    assert rules_of(fs) == {"async-protocol"}
+    assert "retired prefetch-region marker" in fs[0].message
+
+
+def test_async_protocol_out_of_scope_module_silent():
+    src = ("def fetch(keys, solve):\n"
+           "    handle = solve_rows_async(keys, solve)\n"
+           "    return None\n")
+    assert findings(src, module="repro.core.engine",
+                    select=["async-protocol"]) == []
+
+
+# ---------------------------------------------------------------------------
+# shape-flow (flow-sensitive)
+# ---------------------------------------------------------------------------
+
+
+def shapes(src):
+    return findings(
+        "from repro.core import solver_cache\n"
+        "from repro.kernels import layout\n" + src,
+        module="repro.core.solver_cache", select=["shape-flow"])
+
+
+def test_shape_flow_flags_truncated_key_matrix():
+    fs = shapes("def f(params, allowed, boundary, bounds, solve):\n"
+                "    keys = solver_cache.build_keys(\n"
+                "        params, allowed, boundary, bounds)\n"
+                "    return solver_cache.solve_rows_async(\n"
+                "        keys[:, layout.PARAMS_SLICE], solve)\n")
+    assert rules_of(fs) == {"shape-flow"}
+    assert "key-matrix contract" in fs[0].message
+    assert "[n, 6]" in fs[0].message
+
+
+def test_shape_flow_flags_float64_key_matrix():
+    fs = shapes("import numpy as np\n"
+                "def f(keys, solve):\n"
+                "    k64 = np.asarray(keys, np.float64)\n"
+                "    return solve_rows(k64, solve)\n")
+    assert any("float32" in f.message for f in fs)
+
+
+def test_shape_flow_flags_key_width_into_kernel_entry():
+    fs = shapes("def g(params, allowed, boundary, bounds, kernel_ops):\n"
+                "    keys = solver_cache.build_keys(\n"
+                "        params, allowed, boundary, bounds)\n"
+                "    return kernel_ops.dvfs_solve_kernel(keys)\n")
+    assert any("dvfs_solve_kernel()" in f.message for f in fs)
+
+
+def test_shape_flow_correct_and_unknown_widths_pass():
+    fs = shapes("def f(params, allowed, boundary, bounds, solve):\n"
+                "    keys = solver_cache.build_keys(\n"
+                "        params, allowed, boundary, bounds)\n"
+                "    return solver_cache.solve_rows_async(keys, solve)\n"
+                "def passthrough(keys, solve):\n"
+                "    return solver_cache.solve_rows(keys, solve)\n")
+    assert fs == []
+
+
+def test_shape_flow_branch_join_degrades_to_unknown():
+    # Different widths on the two arms: the join loses the fact, and the
+    # rule stays silent rather than guessing.
+    fs = shapes("def f(params, allowed, boundary, bounds, solve, legacy):\n"
+                "    keys = solver_cache.build_keys(\n"
+                "        params, allowed, boundary, bounds)\n"
+                "    if legacy:\n"
+                "        keys = keys[:, layout.PARAMS_SLICE]\n"
+                "    return solver_cache.solve_rows_async(keys, solve)\n")
+    assert fs == []
 
 
 # ---------------------------------------------------------------------------
@@ -282,10 +482,38 @@ def test_dtype_out_of_scope_in_core():
 def test_inline_suppression_silences_named_rule_only():
     line = "e = rows[:, 5]  # lint: disable=matrix-schema\n"
     assert findings(line, module="repro.core.bounds") == []
-    # A different rule name does NOT suppress it.
+    # A different rule name does NOT suppress it — and is itself flagged
+    # as a stale suppression.
     other = "e = rows[:, 5]  # lint: disable=determinism\n"
     assert rules_of(findings(other, module="repro.core.bounds")) == \
-        {"matrix-schema"}
+        {"matrix-schema", "unused-suppression"}
+
+
+def test_unused_suppression_flagged():
+    src = "x = 1  # lint: disable=matrix-schema\n"
+    fs = findings(src, module="repro.core.bounds")
+    assert rules_of(fs) == {"unused-suppression"}
+    assert "does not suppress any finding" in fs[0].message
+
+
+def test_typod_rule_name_in_suppression_flagged():
+    src = "e = rows[:, 5]  # lint: disable=matrx-schema\n"
+    fs = findings(src, module="repro.core.bounds")
+    assert rules_of(fs) == {"matrix-schema", "unused-suppression"}
+
+
+def test_unused_suppression_meta_check_skipped_under_select():
+    # --select runs a subset of families, so a suppression for an
+    # unselected rule cannot be proven stale.
+    src = "x = 1  # lint: disable=matrix-schema\n"
+    assert findings(src, module="repro.core.bounds",
+                    select=["matrix-schema"]) == []
+
+
+def test_suppression_mention_in_docstring_not_parsed():
+    src = ('"""prose mentioning # lint: disable=matrix-schema only."""\n'
+           "x = 1\n")
+    assert findings(src, module="repro.core.bounds") == []
 
 
 def test_suppression_disable_all():
@@ -331,4 +559,44 @@ def test_runner_lists_rules():
     assert proc.returncode == 0
     listed = set(proc.stdout.split())
     assert listed == {"layer-contract", "matrix-schema", "determinism",
-                      "dtype-discipline"}
+                      "dtype-discipline", "pallas-hazard", "async-protocol",
+                      "shape-flow", "unused-suppression"}
+
+
+def test_runner_selects_flow_families_json():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.lint", "--select",
+         "pallas-hazard,async-protocol,shape-flow", "--json"],
+        cwd=REPO, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert json.loads(proc.stdout) == []
+
+
+def test_no_prefetch_region_markers_survive():
+    """The comment markers are retired; the guarantee is derived by the
+    async-protocol dataflow (fixtures above)."""
+    for dirpath, _dirs, files in os.walk(os.path.join(REPO, "src",
+                                                      "repro")):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            text = open(os.path.join(dirpath, fname)).read()
+            assert "prefetch-region-begin" not in text, fname
+            assert "prefetch-region-end" not in text, fname
+
+
+# ---------------------------------------------------------------------------
+# differential mutation corpus (tools/lint/selfcheck.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mutation", selfcheck.MUTATIONS,
+                         ids=lambda m: m.name)
+def test_selfcheck_mutation_caught(mutation):
+    """Each seeded bug in a copy of the real sources is (a) absent from
+    the pristine file and (b) caught by exactly the expected rule."""
+    assert selfcheck.baseline_clean(mutation), \
+        f"pristine {mutation.path} already matches {mutation.expect!r}"
+    caught, all_findings = selfcheck.run_one(mutation)
+    assert caught, ("mutation not caught; findings: "
+                    + "; ".join(f.render() for f in all_findings))

@@ -1,6 +1,9 @@
 """repro-lint: repo-specific static analysis for the scheduler stack.
 
-Four AST-based rule families (stdlib ``ast`` only, no third-party deps):
+Seven AST-based rule families (stdlib ``ast`` only, no third-party deps).
+The first four are per-line matchers; the last three are flow-sensitive —
+they run on the per-function CFG + forward-dataflow framework in
+:mod:`tools.lint.flow`:
 
 * ``layer-contract``    — enforce the docs/ARCHITECTURE.md import DAG
                           (:mod:`tools.lint.layer_dag`) and forbid
@@ -14,20 +17,38 @@ Four AST-based rule families (stdlib ``ast`` only, no third-party deps):
                           scalarization on traced values inside Pallas
                           kernel bodies;
 * ``dtype-discipline``  — forbid dtype-less array constructors and
-                          non-f32 dtypes in kernel code.
+                          non-f32 dtypes in kernel code;
+* ``pallas-hazard``     — ref load/store hazard analysis of Pallas kernel
+                          bodies (RAW/WAR on overlapping slices, stores to
+                          input refs, out-of-bounds / group-crossing
+                          column slices resolved through ``layout.py``);
+* ``async-protocol``    — AsyncSolve handle lifecycle (consumed exactly
+                          once on every path), blocking calls inside the
+                          dataflow-derived prefetch window, stale
+                          full-horizon view reads before the sync point;
+* ``shape-flow``        — symbolic [n, width]/dtype inference proving
+                          every key matrix fed to ``solve_rows`` is
+                          ``[n, KEY_COLS]`` f32 and kernel entries get
+                          declared task-matrix widths.
 
 Run with ``python -m tools.lint`` (see ``--help``).  A finding on a line
 carrying ``# lint: disable=<rule>[,<rule>...]`` (or ``disable=all``) is
 suppressed; every suppression should say why on the same or previous line.
+Suppressions are read from real comment tokens only, and a suppression
+that suppresses nothing is itself an error (``unused-suppression``,
+checked on full runs — i.e. when ``--select`` is not narrowing the rule
+set).
 """
 
 from __future__ import annotations
 
 import ast
 import dataclasses
+import io
 import json
 import re
 import sys
+import tokenize
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Set
 
@@ -84,14 +105,38 @@ def module_name_for(path: Path) -> Optional[str]:
 
 _SUPPRESS_RE = re.compile(r"#\s*lint:\s*disable=([A-Za-z0-9_,\- ]+)")
 
+#: Meta-rule id for suppressions that suppress nothing (see lint_source).
+UNUSED_SUPPRESSION = "unused-suppression"
 
-def _suppressions(lines: Sequence[str]) -> Dict[int, Set[str]]:
-    """1-based line -> set of suppressed rule names (or {"all"})."""
+
+def _suppressions(source: str,
+                  lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """1-based line -> set of suppressed rule names (or {"all"}).
+
+    Only real COMMENT tokens count — a ``# lint: disable=...`` inside a
+    docstring or string literal is prose, not a suppression (and must not
+    trip the unused-suppression check).  Falls back to a line scan if the
+    source does not tokenize (lint_source already survived ast.parse, so
+    this is belt-and-braces).
+    """
     out: Dict[int, Set[str]] = {}
-    for i, line in enumerate(lines, start=1):
-        m = _SUPPRESS_RE.search(line)
+    try:
+        tokens = list(tokenize.generate_tokens(
+            io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        for i, line in enumerate(lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                out[i] = {r.strip() for r in m.group(1).split(",")
+                          if r.strip()}
+        return out
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
         if m:
-            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out[tok.start[0]] = {r.strip() for r in m.group(1).split(",")
+                                 if r.strip()}
     return out
 
 
@@ -120,10 +165,24 @@ def lint_source(source: str, path: str = "<string>", *,
         if wanted is not None and name not in wanted:
             continue
         findings.extend(check(ctx))
-    sup = _suppressions(lines)
+    sup = _suppressions(source, lines)
     kept = [f for f in findings
             if not (sup.get(f.line) and
                     ("all" in sup[f.line] or f.rule in sup[f.line]))]
+    if wanted is None:
+        # Full runs validate the suppressions themselves: a disable that
+        # filtered no finding is stale (or a typo'd rule name) and keeping
+        # it would silently shadow future findings on that line.
+        for line, rules in sorted(sup.items()):
+            used = any(f.line == line and
+                       ("all" in rules or f.rule in rules)
+                       for f in findings)
+            if not used:
+                kept.append(Finding(
+                    path, line, 0, UNUSED_SUPPRESSION,
+                    f"suppression 'lint: disable={','.join(sorted(rules))}'"
+                    " does not suppress any finding — stale or typo'd; "
+                    "delete it"))
     kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     return kept
 
@@ -176,11 +235,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.list_rules:
         for name in ALL_RULES:
             print(name)
+        print(UNUSED_SUPPRESSION)  # meta-check, active on full runs
         return 0
     select = ([r.strip() for r in args.select.split(",") if r.strip()]
               if args.select else None)
     if select:
-        unknown = set(select) - set(ALL_RULES)
+        unknown = set(select) - set(ALL_RULES) - {UNUSED_SUPPRESSION}
         if unknown:
             print(f"unknown rule(s): {', '.join(sorted(unknown))}; "
                   f"known: {', '.join(ALL_RULES)}", file=sys.stderr)

@@ -1,0 +1,486 @@
+"""Per-function CFG + forward-dataflow framework for the flow-sensitive rules.
+
+The PR-7 rules are per-line AST matchers; the flow-sensitive families
+(``pallas-hazard``, ``async-protocol``, ``shape-flow``) need to reason about
+*order* — a store reaching a later load, a handle that is dispatched on one
+path and never consumed on another.  This module provides the shared
+machinery, stdlib ``ast`` only (zero installs, same constraint as the rest
+of ``tools/lint``):
+
+* :func:`build_cfg` — a per-function control-flow graph.  Every statement of
+  the function body lives in exactly ONE basic block, including compound
+  statements (``if``/``while``/``for``/``try``/``with`` headers appear as the
+  last statement of the block that branches on them; their bodies live in
+  successor blocks).  Transfer functions must therefore only look at the
+  expressions a statement *directly owns* — use :func:`stmt_exprs`.
+* :func:`run_forward` — a worklist fixpoint engine for forward analyses,
+  parameterised by ``init``/``transfer``/``join``.  Works for both may-
+  (union-join) and must- (intersection-join) analyses: blocks whose input is
+  still unknown are skipped during joins, the classic initialisation.
+* :func:`reaching_definitions` — the textbook client, used by the framework
+  tests and as the template for the rule-side analyses.
+* :func:`layout_env` / :func:`resolve_cols` — the symbolic slice-bound
+  resolver: column expressions (``col(P0)``, ``layout.BOUNDS_SLICE``,
+  ``NCOL - KEY_COLS``, literal ints/slices) are evaluated against the
+  *actual* constants of ``src/repro/kernels/layout.py`` so the rules never
+  hard-code a second copy of the schema.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import (
+    Any, Callable, Dict, Iterator, List, Optional, Sequence, Set, Tuple,
+)
+
+__all__ = [
+    "Block", "CFG", "build_cfg", "run_forward", "statement_states",
+    "reaching_definitions", "stmt_exprs", "attr_chain", "walk_calls",
+    "layout_env", "resolve_col_expr", "Span",
+]
+
+
+# ---------------------------------------------------------------------------
+# CFG construction
+# ---------------------------------------------------------------------------
+
+class Block:
+    """A basic block: a straight-line run of statements plus successor ids."""
+
+    __slots__ = ("id", "stmts", "succs")
+
+    def __init__(self, bid: int) -> None:
+        self.id = bid
+        self.stmts: List[ast.stmt] = []
+        self.succs: List[int] = []
+
+    def add_succ(self, bid: int) -> None:
+        if bid not in self.succs:
+            self.succs.append(bid)
+
+
+class CFG:
+    """Control-flow graph of one function body.
+
+    ``entry`` and ``exit`` are block ids; ``exit`` is always empty and
+    collects every path out of the function (returns, raises, fallthrough).
+    """
+
+    def __init__(self) -> None:
+        self.blocks: List[Block] = []
+        self.entry = self._new().id
+        self.exit = self._new().id
+
+    def _new(self) -> Block:
+        b = Block(len(self.blocks))
+        self.blocks.append(b)
+        return b
+
+    def preds(self, bid: int) -> List[int]:
+        return [b.id for b in self.blocks if bid in b.succs]
+
+    def reachable(self) -> Set[int]:
+        seen: Set[int] = set()
+        work = [self.entry]
+        while work:
+            b = work.pop()
+            if b in seen:
+                continue
+            seen.add(b)
+            work.extend(self.blocks[b].succs)
+        return seen
+
+
+class _Builder:
+    """Recursive-descent CFG builder over a statement list."""
+
+    def __init__(self, cfg: CFG) -> None:
+        self.cfg = cfg
+        # (break-target, continue-target) stack for loops.
+        self.loop_stack: List[Tuple[int, int]] = []
+
+    def build(self, body: Sequence[ast.stmt], cur: int) -> int:
+        """Lay out ``body`` starting in block ``cur``; return the block that
+        falls through (possibly a fresh dead block after a jump)."""
+        for stmt in body:
+            cur = self._stmt(stmt, cur)
+        return cur
+
+    # -- helpers ----------------------------------------------------------
+    def _seal(self, cur: int) -> int:
+        """Terminate ``cur`` (it just jumped); continue in a dead block."""
+        return self.cfg._new().id
+
+    def _stmt(self, stmt: ast.stmt, cur: int) -> int:
+        cfg = self.cfg
+        blocks = cfg.blocks
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            blocks[cur].stmts.append(stmt)
+            blocks[cur].add_succ(cfg.exit)
+            return self._seal(cur)
+        if isinstance(stmt, ast.Break):
+            blocks[cur].stmts.append(stmt)
+            if self.loop_stack:
+                blocks[cur].add_succ(self.loop_stack[-1][0])
+            return self._seal(cur)
+        if isinstance(stmt, ast.Continue):
+            blocks[cur].stmts.append(stmt)
+            if self.loop_stack:
+                blocks[cur].add_succ(self.loop_stack[-1][1])
+            return self._seal(cur)
+        if isinstance(stmt, ast.If):
+            blocks[cur].stmts.append(stmt)
+            after = cfg._new().id
+            then_b = cfg._new().id
+            blocks[cur].add_succ(then_b)
+            then_end = self.build(stmt.body, then_b)
+            blocks[then_end].add_succ(after)
+            if stmt.orelse:
+                else_b = cfg._new().id
+                blocks[cur].add_succ(else_b)
+                else_end = self.build(stmt.orelse, else_b)
+                blocks[else_end].add_succ(after)
+            else:
+                blocks[cur].add_succ(after)
+            return after
+        if isinstance(stmt, (ast.While, ast.For, ast.AsyncFor)):
+            # Header gets its own block so the back edge re-evaluates the
+            # test / iterator expression.
+            header = cfg._new().id
+            blocks[cur].add_succ(header)
+            blocks[header].stmts.append(stmt)
+            after = cfg._new().id
+            body_b = cfg._new().id
+            blocks[header].add_succ(body_b)
+            self.loop_stack.append((after, header))
+            body_end = self.build(stmt.body, body_b)
+            self.loop_stack.pop()
+            blocks[body_end].add_succ(header)
+            if stmt.orelse:
+                else_b = cfg._new().id
+                blocks[header].add_succ(else_b)
+                else_end = self.build(stmt.orelse, else_b)
+                blocks[else_end].add_succ(after)
+            else:
+                blocks[header].add_succ(after)
+            return after
+        if isinstance(stmt, ast.Try):
+            # Conservative: any statement of the try body may raise, so each
+            # handler is reachable both from the block *entering* the try and
+            # from its end.  finally is laid out on the join path.
+            body_b = cfg._new().id
+            blocks[cur].add_succ(body_b)
+            body_end = self.build(stmt.body, body_b)
+            join = cfg._new().id
+            else_end = self.build(stmt.orelse, body_end) if stmt.orelse \
+                else body_end
+            blocks[else_end].add_succ(join)
+            for handler in stmt.handlers:
+                h_b = cfg._new().id
+                blocks[cur].add_succ(h_b)
+                blocks[body_end].add_succ(h_b)
+                h_end = self.build(handler.body, h_b)
+                blocks[h_end].add_succ(join)
+            if stmt.finalbody:
+                return self.build(stmt.finalbody, join)
+            return join
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            # The With node carries its context-manager expressions; the body
+            # executes linearly after it.
+            blocks[cur].stmts.append(stmt)
+            return self.build(stmt.body, cur)
+        # Simple statement (incl. nested def/class, treated as opaque).
+        blocks[cur].stmts.append(stmt)
+        return cur
+
+
+def build_cfg(fn_or_body: Any) -> CFG:
+    """Build the CFG of a function (or a raw statement list)."""
+    body = fn_or_body.body if isinstance(
+        fn_or_body, (ast.FunctionDef, ast.AsyncFunctionDef)) else fn_or_body
+    cfg = CFG()
+    end = _Builder(cfg).build(body, cfg.entry)
+    cfg.blocks[end].add_succ(cfg.exit)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Forward fixpoint engine
+# ---------------------------------------------------------------------------
+
+def run_forward(
+    cfg: CFG,
+    init: Any,
+    transfer: Callable[[Any, ast.stmt], Any],
+    join: Callable[[List[Any]], Any],
+) -> Dict[int, Any]:
+    """Iterate ``transfer`` over ``cfg`` to a fixpoint; return block-entry
+    states.  Blocks not yet reached contribute nothing to joins (their state
+    is ``None`` = unknown), which makes the same engine correct for both
+    may- and must-analyses.  States must support ``==``.
+    """
+    entry_state: Dict[int, Any] = {cfg.entry: init}
+    work = [cfg.entry]
+    while work:
+        bid = work.pop(0)
+        state = entry_state.get(bid)
+        if state is None:
+            continue
+        for stmt in cfg.blocks[bid].stmts:
+            state = transfer(state, stmt)
+        for succ in cfg.blocks[bid].succs:
+            # The successor's entry is the join over the exit states of all
+            # predecessors whose entry is already known (this block's fresh
+            # exit state included).
+            ins = []
+            for p in cfg.preds(succ):
+                out = state if p == bid else _block_exit(
+                    cfg, p, entry_state, transfer)
+                if out is not None:
+                    ins.append(out)
+            new = join(ins) if ins else None
+            if new is not None and new != entry_state.get(succ):
+                entry_state[succ] = new
+                if succ not in work:
+                    work.append(succ)
+    return entry_state
+
+
+def _block_exit(
+    cfg: CFG,
+    bid: int,
+    entry_state: Dict[int, Any],
+    transfer: Callable[[Any, ast.stmt], Any],
+) -> Any:
+    state = entry_state.get(bid)
+    if state is None:
+        return None
+    for stmt in cfg.blocks[bid].stmts:
+        state = transfer(state, stmt)
+    return state
+
+
+def statement_states(
+    cfg: CFG,
+    entry_state: Dict[int, Any],
+    transfer: Callable[[Any, ast.stmt], Any],
+) -> Iterator[Tuple[Any, ast.stmt]]:
+    """After :func:`run_forward`, re-walk every reachable block yielding the
+    state *before* each statement — the pass where rules emit findings (the
+    fixpoint loop itself may visit a statement many times).
+    """
+    for bid in sorted(cfg.reachable()):
+        state = entry_state.get(bid)
+        if state is None:
+            continue
+        for stmt in cfg.blocks[bid].stmts:
+            yield state, stmt
+            state = transfer(state, stmt)
+
+
+# ---------------------------------------------------------------------------
+# Reaching definitions (framework test client + template)
+# ---------------------------------------------------------------------------
+
+def _assigned_names(stmt: ast.stmt) -> List[str]:
+    out: List[str] = []
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    for t in targets:
+        for node in ast.walk(t):
+            if isinstance(node, ast.Name) and isinstance(
+                    node.ctx, (ast.Store,)):
+                out.append(node.id)
+    return out
+
+
+def reaching_definitions(
+    cfg: CFG,
+) -> Dict[int, Set[Tuple[str, int]]]:
+    """Classic reaching definitions: block-entry sets of ``(name, lineno)``
+    pairs, one per definition site that may reach the block."""
+
+    def transfer(state: Set[Tuple[str, int]],
+                 stmt: ast.stmt) -> Set[Tuple[str, int]]:
+        names = _assigned_names(stmt)
+        if not names:
+            return state
+        gen = {(n, stmt.lineno) for n in names}
+        killed = set(names)
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.AugAssign)):
+            # Loop targets / augmented assigns merge rather than kill: the
+            # old value may still reach (zero-iteration loop, RMW).
+            return state | gen
+        return {d for d in state if d[0] not in killed} | gen
+
+    def join(states: List[Set[Tuple[str, int]]]) -> Set[Tuple[str, int]]:
+        out: Set[Tuple[str, int]] = set()
+        for s in states:
+            out |= s
+        return out
+
+    entry = run_forward(cfg, frozenset(), lambda s, st: frozenset(
+        transfer(set(s), st)), lambda xs: frozenset(join(
+            [set(x) for x in xs])))
+    return {bid: set(s) for bid, s in entry.items()}
+
+
+# ---------------------------------------------------------------------------
+# Expression helpers shared by the rule families
+# ---------------------------------------------------------------------------
+
+def stmt_exprs(stmt: ast.stmt) -> List[ast.expr]:
+    """The expressions a statement *directly owns* — its own test/value/
+    targets, but never the bodies of compound statements (those live in other
+    CFG blocks) and never the bodies of nested function/class definitions.
+    """
+    if isinstance(stmt, ast.Assign):
+        return [stmt.value] + list(stmt.targets)
+    if isinstance(stmt, ast.AugAssign):
+        return [stmt.value, stmt.target]
+    if isinstance(stmt, ast.AnnAssign):
+        return ([stmt.value] if stmt.value else []) + [stmt.target]
+    if isinstance(stmt, ast.Expr):
+        return [stmt.value]
+    if isinstance(stmt, ast.Return):
+        return [stmt.value] if stmt.value else []
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter, stmt.target]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        out: List[ast.expr] = []
+        for item in stmt.items:
+            out.append(item.context_expr)
+            if item.optional_vars is not None:
+                out.append(item.optional_vars)
+        return out
+    if isinstance(stmt, ast.Raise):
+        return [e for e in (stmt.exc, stmt.cause) if e is not None]
+    if isinstance(stmt, ast.Assert):
+        return [stmt.test] + ([stmt.msg] if stmt.msg else [])
+    if isinstance(stmt, ast.Delete):
+        return list(stmt.targets)
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef)):
+        return []  # opaque: nested scopes are separate regions
+    return []
+
+
+def attr_chain(node: ast.expr) -> Optional[str]:
+    """Dotted-name string of a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def walk_calls(expr: ast.expr) -> Iterator[ast.Call]:
+    """Every Call node within ``expr`` (including nested ones)."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# layout.py constant resolution
+# ---------------------------------------------------------------------------
+
+_LAYOUT_ENV: Optional[Dict[str, Any]] = None
+
+
+def layout_env() -> Dict[str, Any]:
+    """Execute ``src/repro/kernels/layout.py`` (stdlib-only by design — the
+    layer DAG pins it as a shared leaf) and return its namespace, so slice
+    bounds resolve against the *declared* schema rather than a copy.  Returns
+    an empty dict if the file is missing (rules then degrade to silence).
+    """
+    global _LAYOUT_ENV
+    if _LAYOUT_ENV is None:
+        path = Path(__file__).resolve().parents[2] / "src" / "repro" / \
+            "kernels" / "layout.py"
+        env: Dict[str, Any] = {}
+        try:
+            exec(compile(path.read_text(), str(path), "exec"), env)
+        except OSError:
+            env = {}
+        _LAYOUT_ENV = env
+    return _LAYOUT_ENV
+
+
+#: Resolved column span: ``(lo, hi)`` half-open, or None when symbolic.
+Span = Tuple[int, int]
+
+
+def _resolve_int(node: ast.expr, env: Dict[str, Any]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = _resolve_int(node.operand, env)
+        return -inner if inner is not None else None
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.Add, ast.Sub)):
+        left = _resolve_int(node.left, env)
+        right = _resolve_int(node.right, env)
+        if left is None or right is None:
+            return None
+        return left + right if isinstance(node.op, ast.Add) else left - right
+    chain = attr_chain(node)
+    if chain is not None:
+        val = env.get(chain.rsplit(".", 1)[-1])
+        if isinstance(val, int) and not isinstance(val, bool):
+            return val
+    return None
+
+
+def resolve_col_expr(
+    node: ast.expr, env: Dict[str, Any], width: Optional[int] = None,
+) -> Optional[Span]:
+    """Resolve a column subscript expression to a half-open ``(lo, hi)`` span.
+
+    Handles literal ints, layout column names (bare or attribute-qualified),
+    ``col(i)`` calls, ``slice``-valued layout constants (``PARAMS_SLICE``),
+    and explicit ``lo:hi`` slices whose endpoints resolve (``None`` endpoints
+    use 0 / ``width`` when the ref width is known).  Returns None when the
+    expression stays symbolic — callers must treat that conservatively.
+    """
+    i = _resolve_int(node, env)
+    if i is not None:
+        return (i, i + 1)
+    chain = attr_chain(node)
+    if chain is not None:
+        val = env.get(chain.rsplit(".", 1)[-1])
+        if isinstance(val, slice) and isinstance(val.start, int) \
+                and isinstance(val.stop, int):
+            return (val.start, val.stop)
+    if isinstance(node, ast.Call):
+        fn = attr_chain(node.func)
+        if fn is not None and fn.rsplit(".", 1)[-1] == "col" \
+                and len(node.args) == 1 and not node.keywords:
+            i = _resolve_int(node.args[0], env)
+            if i is not None:
+                return (i, i + 1)
+        return None
+    if isinstance(node, ast.Slice):
+        if node.step is not None:
+            return None
+        lo = 0 if node.lower is None else _resolve_int(node.lower, env)
+        if node.upper is None:
+            hi: Optional[int] = width
+        else:
+            hi = _resolve_int(node.upper, env)
+        if lo is None or hi is None:
+            return None
+        return (lo, hi)
+    return None

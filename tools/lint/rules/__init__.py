@@ -2,16 +2,22 @@
 
 Adding a rule family = writing a module with a ``NAME`` string and a
 ``check(ctx)`` function, then registering it here (see docs/LINTING.md).
+The flow-sensitive families (pallas-hazard, async-protocol, shape-flow)
+build on the CFG/dataflow framework in :mod:`tools.lint.flow`.
 """
 
 from __future__ import annotations
 
-from tools.lint.rules import (determinism, dtype_discipline, layer_contract,
-                              matrix_schema)
+from tools.lint.rules import (async_protocol, determinism, dtype_discipline,
+                              layer_contract, matrix_schema, pallas_hazard,
+                              shape_flow)
 
 ALL_RULES = {
     layer_contract.NAME: layer_contract.check,
     matrix_schema.NAME: matrix_schema.check,
     determinism.NAME: determinism.check,
     dtype_discipline.NAME: dtype_discipline.check,
+    pallas_hazard.NAME: pallas_hazard.check,
+    async_protocol.NAME: async_protocol.check,
+    shape_flow.NAME: shape_flow.check,
 }

@@ -1,0 +1,452 @@
+"""async-protocol: AsyncSolve handle lifecycle + prefetch-window discipline.
+
+The pipelined online driver's bit-identity guarantee rests on a protocol
+that used to be enforced by ``# lint: prefetch-region`` comment markers.
+This family retires the markers and proves the same contracts by dataflow
+over the CFG of every function in ``repro.core.online`` /
+``repro.core.solver_cache`` / ``repro.core.machines`` /
+``repro.core.single_task``:
+
+* **Handle lifecycle** — a variable assigned from a dispatcher call
+  (``solve_rows_async`` / ``configure_classes_async``) must reach exactly
+  one consumption on every path.  States per variable (a may-set, union
+  join): LIVE (dispatched), NONE (the ``... if cond else None`` arm),
+  CONSUMED (``.result()`` called, or passed to a ``*_sync`` call), ESCAPED
+  (stored into a container/attribute, returned, or passed to a non-sync
+  call — ownership transferred, tracking stops).  Flagged: a handle that
+  can only be LIVE at function exit (dropped — its solve result is
+  discarded and the cache never filled), a second consumption of a
+  possibly-CONSUMED handle, and rebinding a name while a LIVE handle may
+  still be in it.
+* **Blocking calls in the prefetch window** — from any dispatch point
+  (a dispatcher call, or a value-discarded ``.dispatch(...)`` method call)
+  to the end of the function, work may be in flight (may-analysis, no
+  kill: consuming one handle proves nothing about the others).  Blocking
+  host<->device calls there (``np.asarray`` / ``jnp.asarray`` /
+  ``jax.device_get`` / ``.block_until_ready()``) stall the overlap and are
+  flagged — except inside ``*_sync``-named functions, whose suffix is the
+  documented license to materialize.
+* **Stale full-horizon view reads** — between a handle-producing dispatch
+  (``h = state.dispatch(...)``) and its sync point, the full-horizon views
+  (``.cfgs`` / ``.order_cls``, and the chunk-context readers
+  ``update_tasks`` / ``prepare_chunk``) are stale for the dispatched span.
+  A must-analysis (intersection join — flagged only when it holds on every
+  path) marks the window dirty at an unconditional handle-producing
+  assignment and clean at a sync call (``.result()`` / any ``*_sync``
+  call); view reads in a dirty window are flagged.
+* **Retired markers** — any surviving ``prefetch-region-begin/-end``
+  comment is itself an error: the guarantee is derived from the code now,
+  and a marker would suggest otherwise.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from tools.lint import Context, Finding
+from tools.lint.flow import (
+    CFG, attr_chain, build_cfg, run_forward, statement_states, stmt_exprs,
+    walk_calls,
+)
+
+NAME = "async-protocol"
+
+_SCOPE = (
+    "repro.core.online",
+    "repro.core.solver_cache",
+    "repro.core.machines",
+    "repro.core.single_task",
+)
+
+#: Calls that create an AsyncSolve-protocol handle (matched on the final
+#: attribute, so both ``solver_cache.solve_rows_async`` and a bare
+#: ``solve_rows_async`` count).
+_DISPATCHERS = {"solve_rows_async", "configure_classes_async"}
+
+_BLOCKING_CALLS = {"np.asarray", "numpy.asarray", "jnp.asarray",
+                   "jax.numpy.asarray", "jax.device_get"}
+
+#: Full-horizon view attributes and chunk-context reader methods that must
+#: not be read while a dispatched span is unconsumed.
+_VIEW_ATTRS = {"cfgs", "order_cls"}
+_VIEW_READERS = {"update_tasks", "prepare_chunk"}
+
+# Lifecycle lattice elements (per-variable may-sets of these).
+LIVE, NONE, CONSUMED, ESCAPED = "live", "none", "consumed", "escaped"
+
+_LifeState = FrozenSet[Tuple[str, str]]  # {(var, element)}
+
+
+def _final_name(func: ast.expr) -> str:
+    chain = attr_chain(func) or ""
+    return chain.rsplit(".", 1)[-1]
+
+
+def _dispatch_kind(value: ast.expr) -> Optional[str]:
+    """LIVE for a direct dispatcher call, NONE-able LIVE for the
+    ``dispatch() if cond else None`` idiom, else None."""
+    if isinstance(value, ast.Call) and _final_name(value.func) \
+            in _DISPATCHERS:
+        return LIVE
+    if isinstance(value, ast.IfExp):
+        a = _dispatch_kind(value.body)
+        b = _dispatch_kind(value.orelse)
+        none_arm = (isinstance(value.body, ast.Constant)
+                    and value.body.value is None) or \
+                   (isinstance(value.orelse, ast.Constant)
+                    and value.orelse.value is None)
+        if (a or b) and none_arm:
+            return "maybe"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Handle lifecycle
+# ---------------------------------------------------------------------------
+
+def _var_states(state: _LifeState, var: str) -> FrozenSet[str]:
+    return frozenset(e for v, e in state if v == var)
+
+
+def _set_var(state: _LifeState, var: str,
+             elems: FrozenSet[str]) -> _LifeState:
+    return frozenset({(v, e) for v, e in state if v != var}
+                     | {(var, e) for e in elems})
+
+
+def _map_var(state: _LifeState, var: str, frm: str, to: str) -> _LifeState:
+    cur = _var_states(state, var)
+    if frm not in cur:
+        return state
+    return _set_var(state, var, (cur - {frm}) | {to})
+
+
+def _consumes(call: ast.Call, var: str) -> bool:
+    """Does this call consume ``var``? — ``var.result()`` or ``var`` passed
+    to a ``*_sync``-named callable."""
+    if isinstance(call.func, ast.Attribute) and call.func.attr == "result" \
+            and isinstance(call.func.value, ast.Name) \
+            and call.func.value.id == var:
+        return True
+    if _final_name(call.func).endswith("_sync"):
+        for arg in call.args + [k.value for k in call.keywords]:
+            if isinstance(arg, ast.Name) and arg.id == var:
+                return True
+    return False
+
+
+def _escapes(stmt: ast.stmt, var: str) -> bool:
+    """Ownership transfer: ``var`` returned/yielded, stored into a
+    container/tuple/attribute/subscript, or passed to a call that is not a
+    sync point (e.g. ``batches.append((.., var))``, ``ClassSolves(
+    stacked=var)``)."""
+    for expr in stmt_exprs(stmt):
+        for node in ast.walk(expr):
+            if isinstance(node, (ast.Tuple, ast.List, ast.Set, ast.Dict)):
+                for elt in ast.walk(node):
+                    if isinstance(elt, ast.Name) and elt.id == var \
+                            and elt is not node:
+                        return True
+            if isinstance(node, ast.Call) and not _consumes(node, var):
+                for arg in node.args + [k.value for k in node.keywords]:
+                    if isinstance(arg, ast.Name) and arg.id == var:
+                        return True
+    if isinstance(stmt, (ast.Return,)) and stmt.value is not None:
+        for node in ast.walk(stmt.value):
+            if isinstance(node, ast.Name) and node.id == var:
+                return True
+    if isinstance(stmt, ast.Assign):
+        for tgt in stmt.targets:
+            if not isinstance(tgt, ast.Name):
+                for node in ast.walk(tgt):
+                    if isinstance(node, ast.Name) and node.id == var:
+                        pass  # var as a *target* base is a write, not escape
+        if isinstance(stmt.value, ast.Name) and stmt.value.id == var:
+            return True  # aliased into another name: stop tracking
+    return False
+
+
+def _lifecycle_findings(ctx: Context, fn: ast.FunctionDef) -> List[Finding]:
+    # Only analyse functions that dispatch at least once.
+    creation: Dict[str, ast.stmt] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and _dispatch_kind(node.value) is not None:
+            creation[node.targets[0].id] = node
+    if not creation:
+        return []
+    tracked = set(creation)
+
+    def transfer(state: _LifeState, stmt: ast.stmt) -> _LifeState:
+        # Consumption / escape first (RHS evaluates before rebinding).
+        for expr in stmt_exprs(stmt):
+            for call in walk_calls(expr):
+                for var in tracked:
+                    if _consumes(call, var):
+                        state = _map_var(state, var, LIVE, CONSUMED)
+                        state = _map_var(state, var, "maybe", CONSUMED)
+        for var in tracked:
+            if _escapes(stmt, var):
+                cur = _var_states(state, var)
+                if cur & {LIVE, "maybe"}:
+                    state = _set_var(
+                        state, var, (cur - {LIVE, "maybe"}) | {ESCAPED})
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and stmt.targets[0].id in tracked:
+            var = stmt.targets[0].id
+            kind = _dispatch_kind(stmt.value)
+            if kind == LIVE:
+                state = _set_var(state, var, frozenset({LIVE}))
+            elif kind == "maybe":
+                state = _set_var(state, var, frozenset({LIVE, NONE}))
+            else:
+                state = _set_var(state, var, frozenset())
+        return state
+
+    def join(states: List[_LifeState]) -> _LifeState:
+        out: set = set()
+        for s in states:
+            out |= s
+        return frozenset(out)
+
+    cfg: CFG = build_cfg(fn)
+    entry = run_forward(cfg, frozenset(), transfer, join)
+
+    findings: List[Finding] = []
+    seen: set = set()
+
+    def flag(node: ast.AST, key: tuple, msg: str) -> None:
+        if key not in seen:
+            seen.add(key)
+            findings.append(ctx.finding(node, NAME, msg))
+
+    for state, stmt in statement_states(cfg, entry, transfer):
+        # Double-consume: consuming a possibly-already-consumed handle.
+        for expr in stmt_exprs(stmt):
+            for call in walk_calls(expr):
+                for var in tracked:
+                    if _consumes(call, var):
+                        cur = _var_states(state, var)
+                        if CONSUMED in cur and ESCAPED not in cur:
+                            flag(call, ("dbl", var, call.lineno),
+                                 f"handle {var} may already be consumed "
+                                 "here (result() memoizes, but a second "
+                                 "sync point hides a protocol bug)")
+        # Rebinding a name that may still hold a live handle.
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and stmt.targets[0].id in tracked:
+            var = stmt.targets[0].id
+            cur = _var_states(state, var)
+            consumed_here = any(
+                _consumes(call, var)
+                for expr in stmt_exprs(stmt) for call in walk_calls(expr))
+            if LIVE in cur and not consumed_here \
+                    and not _escapes(stmt, var):
+                flag(stmt, ("over", var, stmt.lineno),
+                     f"{var} is rebound while it may still hold a live "
+                     "unconsumed handle — the in-flight solve is dropped")
+
+    # Dropped handles: only-LIVE (never consumed, never escaped) at exit.
+    exit_states = [
+        _block_exit_state(cfg, bid, entry, transfer)
+        for bid in cfg.preds(cfg.exit)]
+    merged: Dict[str, set] = {v: set() for v in tracked}
+    for st in exit_states:
+        if st is None:
+            continue
+        for v, e in st:
+            if v in merged:
+                merged[v].add(e)
+    for var, elems in merged.items():
+        if LIVE in elems and CONSUMED not in elems and ESCAPED not in elems:
+            flag(creation[var], ("drop", var),
+                 f"handle {var} is dispatched but never reaches result()/"
+                 "a *_sync consumer on any path — the solve result is "
+                 "dropped and the cache is never filled")
+    return findings
+
+
+def _block_exit_state(cfg: CFG, bid: int, entry: Dict[int, object],
+                      transfer) -> Optional[_LifeState]:
+    state = entry.get(bid)
+    if state is None:
+        return None
+    for stmt in cfg.blocks[bid].stmts:
+        state = transfer(state, stmt)
+    return state  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# Blocking calls in the prefetch window (may-analysis)
+# ---------------------------------------------------------------------------
+
+def _opens_window(stmt: ast.stmt) -> bool:
+    for expr in stmt_exprs(stmt):
+        for call in walk_calls(expr):
+            if _final_name(call.func) in _DISPATCHERS:
+                return True
+            if isinstance(call.func, ast.Attribute) \
+                    and call.func.attr == "dispatch":
+                return True
+    return False
+
+
+def _blocking_calls(stmt: ast.stmt) -> List[Tuple[ast.Call, str]]:
+    out = []
+    for expr in stmt_exprs(stmt):
+        for call in walk_calls(expr):
+            chain = attr_chain(call.func) or ""
+            if chain in _BLOCKING_CALLS:
+                out.append((call, f"{chain}()"))
+            elif isinstance(call.func, ast.Attribute) \
+                    and call.func.attr == "block_until_ready":
+                out.append((call, ".block_until_ready()"))
+    return out
+
+
+def _window_findings(ctx: Context, fn: ast.FunctionDef) -> List[Finding]:
+    if fn.name.endswith("_sync"):
+        return []
+
+    def transfer(state: bool, stmt: ast.stmt) -> bool:
+        return state or _opens_window(stmt)
+
+    cfg: CFG = build_cfg(fn)
+    entry = run_forward(cfg, False, transfer, lambda xs: any(xs))
+    findings: List[Finding] = []
+    seen: set = set()
+    for state, stmt in statement_states(cfg, entry, transfer):
+        if not state:
+            continue
+        for call, label in _blocking_calls(stmt):
+            key = (call.lineno, call.col_offset)
+            if key in seen:
+                continue
+            seen.add(key)
+            findings.append(ctx.finding(
+                call, NAME, f"{label} blocks on device results while a "
+                "dispatched solve batch may be in flight; materialize only "
+                "inside a *_sync method so the prefetch keeps overlapping "
+                "placement"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Stale full-horizon view reads (must-analysis)
+# ---------------------------------------------------------------------------
+
+def _is_handle_call(expr: ast.expr) -> bool:
+    if not isinstance(expr, ast.Call):
+        return False
+    if _final_name(expr.func) in _DISPATCHERS:
+        return True
+    return isinstance(expr.func, ast.Attribute) \
+        and expr.func.attr == "dispatch"
+
+
+def _produces_handle(stmt: ast.stmt) -> bool:
+    """Handle-producing assignment: ``h = state.dispatch(..)``, a direct
+    dispatcher call, or either arm of the ``dispatch(..) if c else None``
+    idiom.  A bare ``obj.dispatch(..)`` expression statement does NOT count
+    — it returns no handle, so no view depends on consuming it (the
+    deferred-readjust queue)."""
+    if not isinstance(stmt, ast.Assign):
+        return False
+    value = stmt.value
+    if isinstance(value, ast.IfExp):
+        return _is_handle_call(value.body) or _is_handle_call(value.orelse)
+    return _is_handle_call(value)
+
+
+def _syncs(stmt: ast.stmt) -> bool:
+    for expr in stmt_exprs(stmt):
+        for call in walk_calls(expr):
+            name = _final_name(call.func)
+            if name == "result" or name.endswith("_sync"):
+                return True
+    return False
+
+
+def _view_reads(stmt: ast.stmt) -> List[Tuple[ast.AST, str]]:
+    out: List[Tuple[ast.AST, str]] = []
+    for expr in stmt_exprs(stmt):
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.ctx, ast.Load) \
+                    and node.attr in _VIEW_ATTRS:
+                out.append((node, f".{node.attr}"))
+            elif isinstance(node, ast.Call) \
+                    and _final_name(node.func) in _VIEW_READERS:
+                out.append((node, f"{_final_name(node.func)}()"))
+    return out
+
+
+def _view_findings(ctx: Context, fn: ast.FunctionDef) -> List[Finding]:
+    if fn.name.endswith("_sync"):
+        return []
+
+    def transfer(state: bool, stmt: ast.stmt) -> bool:
+        if _syncs(stmt):
+            return False
+        if _produces_handle(stmt):
+            return True
+        return state
+
+    def join(states: List[bool]) -> bool:
+        return all(states)  # must: dirty only if dirty on every path
+
+    cfg: CFG = build_cfg(fn)
+    entry = run_forward(cfg, False, transfer, join)
+    findings: List[Finding] = []
+    seen: set = set()
+    for state, stmt in statement_states(cfg, entry, transfer):
+        if not state or _syncs(stmt):
+            continue
+        for node, label in _view_reads(stmt):
+            key = (node.lineno, node.col_offset)
+            if key in seen:
+                continue
+            seen.add(key)
+            findings.append(ctx.finding(
+                node, NAME, f"{label} reads a full-horizon view between a "
+                "dispatch and its sync point — the dispatched span is "
+                "stale until consume_sync/result() lands it"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Retired markers
+# ---------------------------------------------------------------------------
+
+def _marker_findings(ctx: Context) -> List[Finding]:
+    findings = []
+    for i, line in enumerate(ctx.lines, start=1):
+        if "prefetch-region-begin" in line or "prefetch-region-end" in line:
+            findings.append(Finding(
+                path=ctx.path, line=i, col=0, rule=NAME,
+                message="retired prefetch-region marker: the window is "
+                        "derived by async-protocol dataflow now — delete "
+                        "the comment"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def check(ctx: Context) -> List[Finding]:
+    mod = ctx.module or ""
+    if not mod.startswith(_SCOPE):
+        return []
+    findings = _marker_findings(ctx)
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef,)):
+            continue
+        findings += _lifecycle_findings(ctx, fn)
+        findings += _window_findings(ctx, fn)
+        findings += _view_findings(ctx, fn)
+    return findings

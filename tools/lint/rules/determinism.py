@@ -21,14 +21,12 @@ trace time).  Four checks:
   them, or ``if``/``while`` on a condition derived from them, is flagged.
   Static Python conditionals on non-traced closure values (e.g.
   ``if causal:``) are fine — taint starts at the ref reads only.
-* **Blocking sync inside the prefetch region** (``repro.core``): between
-  ``# lint: prefetch-region-begin`` / ``-end`` markers (the online
-  pipeline's double-buffered driver in ``repro.core.online``) a solve
-  batch is in flight; ``np.asarray`` / ``jnp.asarray`` /
-  ``jax.device_get`` / ``.block_until_ready()`` force a host<->device
-  sync and stall the pipeline.  Host<->device materialization must be
-  confined to methods whose name ends in ``_sync`` — any other blocking
-  call inside the region is flagged.
+
+The blocking-sync-inside-the-prefetch-region check that used to live here
+(driven by ``# lint: prefetch-region-begin/-end`` comment markers) is
+retired: the ``async-protocol`` family now derives the prefetch window by
+dataflow from the dispatch sites themselves, and flags any surviving
+marker as an error.
 """
 
 from __future__ import annotations
@@ -171,67 +169,6 @@ def _check_kernel_bodies(ctx: Context) -> List[Finding]:
     return findings
 
 
-_PREFETCH_BEGIN = "lint: prefetch-region-begin"
-_PREFETCH_END = "lint: prefetch-region-end"
-_BLOCKING_CALLS = {"np.asarray", "numpy.asarray", "jnp.asarray",
-                   "jax.numpy.asarray", "jax.device_get"}
-
-
-def _prefetch_regions(ctx: Context) -> List[tuple]:
-    """(begin, end) line-number pairs of the prefetch-managed regions."""
-    regions = []
-    begin = None
-    for i, line in enumerate(ctx.lines, start=1):
-        if _PREFETCH_BEGIN in line and begin is None:
-            begin = i
-        elif _PREFETCH_END in line and begin is not None:
-            regions.append((begin, i))
-            begin = None
-    if begin is not None:  # unmatched begin runs to EOF
-        regions.append((begin, len(ctx.lines)))
-    return regions
-
-
-def _check_prefetch_region(ctx: Context) -> List[Finding]:
-    regions = _prefetch_regions(ctx)
-    if not regions:
-        return []
-
-    def in_region(lineno: int) -> bool:
-        return any(b <= lineno <= e for b, e in regions)
-
-    # Spans of functions whose name licenses blocking: a ``*_sync`` suffix
-    # marks the method as an explicit host<->device materialization point.
-    sync_spans = [
-        (fn.lineno, fn.end_lineno)
-        for fn in ast.walk(ctx.tree)
-        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
-        and fn.name.endswith("_sync")]
-
-    def in_sync(lineno: int) -> bool:
-        return any(b <= lineno <= e for b, e in sync_spans)
-
-    findings = []
-    for node in ast.walk(ctx.tree):
-        if not isinstance(node, ast.Call):
-            continue
-        if not in_region(node.lineno) or in_sync(node.lineno):
-            continue
-        chain = _attr_chain(node.func)
-        if chain in _BLOCKING_CALLS:
-            findings.append(ctx.finding(
-                node, NAME, f"{chain}() blocks on device results inside the "
-                "prefetch region; materialize only inside a *_sync method "
-                "so the in-flight solve batch keeps overlapping placement"))
-        elif (isinstance(node.func, ast.Attribute)
-              and node.func.attr == "block_until_ready"):
-            findings.append(ctx.finding(
-                node, NAME, ".block_until_ready() stalls the pipeline "
-                "inside the prefetch region; confine host<->device sync "
-                "points to *_sync methods"))
-    return findings
-
-
 def check(ctx: Context) -> List[Finding]:
     mod = ctx.module or ""
     if not mod.startswith("repro"):
@@ -241,7 +178,6 @@ def check(ctx: Context) -> List[Finding]:
         findings += _check_clock(ctx)
     if mod.startswith("repro.core"):
         findings += _check_mutable_defaults(ctx)
-        findings += _check_prefetch_region(ctx)
     if mod.startswith("repro.kernels"):
         findings += _check_kernel_bodies(ctx)
     return findings

@@ -1,0 +1,441 @@
+"""pallas-hazard: ref load/store hazards inside Pallas kernel bodies.
+
+A Pallas kernel body is straight-line traced code over mutable refs; the
+compiler will happily reorder nothing for you, so a read-after-write on an
+overlapping slice, a store into an input ref, or a column slice that drifts
+across a ``layout.py`` group boundary silently corrupts ``e_total`` instead
+of crashing.  This family abstractly interprets every function with
+``*_ref`` parameters in ``repro.kernels``:
+
+* **Ref classification** — the module's ``pl.pallas_call`` site is cross-
+  referenced (``in_specs``/``out_specs``/``scratch_shapes`` map positionally
+  onto the kernel's ref parameters) to split refs into input / output /
+  scratch; any store to an *input* ref is flagged.
+* **Symbolic slice bounds** — block widths come from the BlockSpec shapes,
+  resolved through the constants of ``kernels/layout.py`` (``NCOL``,
+  ``SOL_COLS``, ``col(i)``, ``PARAMS_SLICE``, ...).  Loads of a full ref
+  (``t = tasks_ref[...]``) taint the target, so later column subscripts on
+  ``t`` are checked against the ref's declared width: out-of-bounds columns
+  and multi-column slices that cross a column-group boundary (PARAMS /
+  ALLOWED / READJUST / BOUNDS / padding) are flagged.  Symbolically
+  unresolvable bounds stay silent — the rule never guesses.
+* **RAW / WAR hazards** — a forward may-analysis per *region* (the kernel's
+  top-level body and each nested ``@pl.when`` function are separate regions,
+  predicated off each other): a load overlapping a reaching store to the
+  same ref (read-after-write), or a store *partially* overlapping a prior
+  load (write-after-read on a strict sub-slice — mixed-staleness lanes) is
+  flagged unless a barrier call intervenes.  Same-statement RMW
+  (``acc_ref[...] = acc_ref[...] * c + u``) is idiomatic and exempt: the
+  right-hand load completes before the store.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple, Union
+
+from tools.lint import Context, Finding
+from tools.lint.flow import (
+    CFG, _resolve_int, attr_chain, build_cfg, layout_env, resolve_col_expr,
+    run_forward, statement_states, stmt_exprs,
+)
+
+NAME = "pallas-hazard"
+
+#: Access span over a ref's last axis: concrete half-open bounds, the whole
+#: ref, or symbolically unknown.
+Span = Union[Tuple[int, int], str, None]
+FULL = "full"
+
+#: Hazard-state element: ("L"|"S", ref name, span, lineno).
+_Access = Tuple[str, str, Span, int]
+_State = FrozenSet[_Access]
+
+
+# ---------------------------------------------------------------------------
+# pallas_call cross-referencing: ref name -> role + width
+# ---------------------------------------------------------------------------
+
+class _RefInfo:
+    __slots__ = ("role", "width")
+
+    def __init__(self, role: str, width: Optional[int]) -> None:
+        self.role = role      # "in" | "out" | "scratch" | "unknown"
+        self.width = width    # last-axis block width, when resolvable
+
+
+def _shape_last(call: ast.expr, env: Dict[str, object]) -> Optional[int]:
+    """Last-axis width of a ``pl.BlockSpec((.., W), ..)`` / VMEM shape."""
+    if not isinstance(call, ast.Call) or not call.args:
+        return None
+    shape = call.args[0]
+    if isinstance(shape, ast.Tuple) and shape.elts:
+        return _resolve_int(shape.elts[-1], env)
+    return None
+
+
+def _spec_list(node: Optional[ast.expr]) -> List[ast.expr]:
+    if node is None:
+        return []
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+def _kernel_specs(tree: ast.AST) -> Dict[str, Tuple[int, int, int,
+                                                    List[Optional[int]],
+                                                    List[Optional[int]]]]:
+    """kernel function name -> (n_in, n_out, n_scratch, in_widths,
+    out_widths), from the module's ``pl.pallas_call`` sites.  The kernel may
+    be passed directly, via ``functools.partial(fn, ...)``, or via a local
+    variable assigned from such a partial."""
+    env = layout_env()
+    # Local aliases: name -> underlying function name (through partial).
+    alias: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call):
+            chain = attr_chain(node.value.func) or ""
+            if chain.rsplit(".", 1)[-1] == "partial" and node.value.args:
+                inner = node.value.args[0]
+                if isinstance(inner, ast.Name):
+                    alias[node.targets[0].id] = inner.id
+
+    out: Dict[str, Tuple[int, int, int, List[Optional[int]],
+                         List[Optional[int]]]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func) or ""
+        if chain.rsplit(".", 1)[-1] != "pallas_call" or not node.args:
+            continue
+        target = node.args[0]
+        name: Optional[str] = None
+        if isinstance(target, ast.Call):  # functools.partial(fn, ...)
+            if target.args and isinstance(target.args[0], ast.Name):
+                name = target.args[0].id
+        elif isinstance(target, ast.Name):
+            name = alias.get(target.id, target.id)
+        if name is None:
+            continue
+        kw = {k.arg: k.value for k in node.keywords if k.arg}
+        in_specs = _spec_list(kw.get("in_specs"))
+        out_specs = _spec_list(kw.get("out_specs"))
+        scratch = _spec_list(kw.get("scratch_shapes"))
+        out[name] = (
+            len(in_specs), len(out_specs), len(scratch),
+            [_shape_last(s, env) for s in in_specs],
+            [_shape_last(s, env) for s in out_specs],
+        )
+    return out
+
+
+def _classify_refs(
+    fn: ast.FunctionDef,
+    specs: Dict[str, Tuple[int, int, int, List[Optional[int]],
+                           List[Optional[int]]]],
+) -> Dict[str, _RefInfo]:
+    params = [a.arg for a in fn.args.args]
+    refs = [p for p in params if p.endswith("_ref")]
+    info = {r: _RefInfo("unknown", None) for r in refs}
+    spec = specs.get(fn.name)
+    if spec is None:
+        return info
+    n_in, n_out, n_scratch, in_w, out_w = spec
+    if n_in + n_out + n_scratch != len(params):
+        return info
+    for i, p in enumerate(params):
+        if p not in info:
+            continue
+        if i < n_in:
+            info[p] = _RefInfo("in", in_w[i])
+        elif i < n_in + n_out:
+            info[p] = _RefInfo("out", out_w[i - n_in])
+        else:
+            info[p] = _RefInfo("scratch", None)
+    return info
+
+
+# ---------------------------------------------------------------------------
+# Subscript access extraction
+# ---------------------------------------------------------------------------
+
+def _is_full_slice(node: ast.expr) -> bool:
+    return isinstance(node, ast.Slice) and node.lower is None \
+        and node.upper is None and node.step is None
+
+
+def _access_span(sub: ast.Subscript, env: Dict[str, object],
+                 width: Optional[int]) -> Span:
+    """Span of a ref/tainted-matrix subscript over the *last* axis."""
+    sl = sub.slice
+    if isinstance(sl, ast.Constant) and sl.value is Ellipsis:
+        return FULL
+    if _is_full_slice(sl):
+        return FULL
+    if isinstance(sl, ast.Tuple):
+        if all(_is_full_slice(e) or (
+                isinstance(e, ast.Constant) and e.value is Ellipsis)
+                for e in sl.elts):
+            return FULL
+        lead, last = sl.elts[:-1], sl.elts[-1]
+        if lead and all(_is_full_slice(e) for e in lead):
+            span = resolve_col_expr(last, env, width)
+            return span
+        return None
+    # 1-D subscript with a resolvable index / slice.
+    return resolve_col_expr(sl, env, width)
+
+
+def _ref_accesses(stmt: ast.stmt, names: Sequence[str],
+                  env: Dict[str, object],
+                  widths: Dict[str, Optional[int]],
+                  ) -> Tuple[List[Tuple[str, Span, ast.Subscript]],
+                             List[Tuple[str, Span, ast.Subscript]]]:
+    """(loads, stores) of tracked names in the statement's own expressions."""
+    loads: List[Tuple[str, Span, ast.Subscript]] = []
+    stores: List[Tuple[str, Span, ast.Subscript]] = []
+    for expr in stmt_exprs(stmt):
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Subscript):
+                continue
+            if not isinstance(node.value, ast.Name):
+                continue
+            name = node.value.id
+            if name not in names:
+                continue
+            span = _access_span(node, env, widths.get(name))
+            if isinstance(node.ctx, ast.Store):
+                stores.append((name, span, node))
+            else:
+                loads.append((name, span, node))
+    return loads, stores
+
+
+def _concrete(span: Span, width: Optional[int]) -> Optional[Tuple[int, int]]:
+    if span == FULL:
+        return (0, width) if width is not None else None
+    if isinstance(span, tuple):
+        return span
+    return None
+
+
+def _may_overlap(a: Span, b: Span, width: Optional[int]) -> bool:
+    """Conservative overlap: unknown spans are assumed to overlap."""
+    ca, cb = _concrete(a, width), _concrete(b, width)
+    if ca is None or cb is None:
+        return True
+    return ca[0] < cb[1] and cb[0] < ca[1]
+
+
+def _definitely_partial(store: Span, load: Span,
+                        width: Optional[int]) -> bool:
+    """True only when both spans concretize and overlap without being
+    equal — the provable mixed-staleness case."""
+    cs, cl = _concrete(store, width), _concrete(load, width)
+    if cs is None or cl is None:
+        return False
+    return cs != cl and cs[0] < cl[1] and cl[0] < cs[1]
+
+
+# ---------------------------------------------------------------------------
+# Column-group (schema-drift) checks
+# ---------------------------------------------------------------------------
+
+def _groups_for(width: int, env: Dict[str, object]
+                ) -> List[Tuple[int, int, str]]:
+    ncol = env.get("NCOL")
+    key_cols = env.get("KEY_COLS")
+    n_params = env.get("N_PARAMS")
+    if not isinstance(ncol, int) or not isinstance(key_cols, int) \
+            or not isinstance(n_params, int):
+        return [(0, width, "matrix")]
+    if width in (ncol, key_cols):
+        allowed = env.get("ALLOWED")
+        readjust = env.get("READJUST")
+        v_min = env.get("V_MIN")
+        if not isinstance(allowed, int) or not isinstance(readjust, int) \
+                or not isinstance(v_min, int):
+            return [(0, width, "matrix")]
+        groups = [(0, n_params, "PARAMS"),
+                  (allowed, allowed + 1, "ALLOWED"),
+                  (readjust, readjust + 1, "READJUST"),
+                  (v_min, key_cols, "BOUNDS")]
+        if width > key_cols:
+            groups.append((key_cols, width, "padding"))
+        return groups
+    return [(0, width, "matrix")]
+
+
+def _check_span(ctx: Context, node: ast.Subscript, span: Span,
+                width: Optional[int], env: Dict[str, object],
+                what: str) -> List[Finding]:
+    if width is None or not isinstance(span, tuple):
+        return []
+    lo, hi = span
+    if lo < 0 or hi > width:
+        return [ctx.finding(
+            node, NAME, f"column access [{lo}:{hi}] out of bounds for the "
+            f"[*, {width}] {what}")]
+    if hi - lo > 1 and (lo, hi) != (0, width):
+        for g_lo, g_hi, g_name in _groups_for(width, env):
+            if g_lo <= lo and hi <= g_hi:
+                return []
+        return [ctx.finding(
+            node, NAME, f"slice [{lo}:{hi}] crosses a layout.py column-group "
+            f"boundary of the [*, {width}] {what} (PARAMS/ALLOWED/READJUST/"
+            "BOUNDS must be addressed as whole groups — schema drift)")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# Per-region hazard dataflow
+# ---------------------------------------------------------------------------
+
+def _is_barrier(stmt: ast.stmt) -> bool:
+    for expr in stmt_exprs(stmt):
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                chain = attr_chain(node.func) or ""
+                if "barrier" in chain.rsplit(".", 1)[-1]:
+                    return True
+    return False
+
+
+def _region_findings(
+    ctx: Context, body: Sequence[ast.stmt], refs: Dict[str, _RefInfo],
+    env: Dict[str, object],
+) -> List[Finding]:
+    names = list(refs)
+    widths = {r: info.width for r, info in refs.items()}
+
+    def transfer(state: _State, stmt: ast.stmt) -> _State:
+        if _is_barrier(stmt):
+            return frozenset()
+        loads, stores = _ref_accesses(stmt, names, env, widths)
+        acc = set(state)
+        acc |= {("L", n, s, stmt.lineno) for n, s, _ in loads}
+        acc |= {("S", n, s, stmt.lineno) for n, s, _ in stores}
+        return frozenset(acc)
+
+    def join(states: List[_State]) -> _State:
+        out: set = set()
+        for s in states:
+            out |= s
+        return frozenset(out)
+
+    cfg: CFG = build_cfg(list(body))
+    entry = run_forward(cfg, frozenset(), transfer, join)
+    findings: List[Finding] = []
+    seen: set = set()
+    for state, stmt in statement_states(cfg, entry, transfer):
+        loads, stores = _ref_accesses(stmt, names, env, widths)
+        for n, span, node in loads:
+            w = widths.get(n)
+            for kind, rn, rspan, rline in state:
+                if kind == "S" and rn == n and _may_overlap(
+                        span, rspan, w):
+                    key = ("raw", n, node.lineno, node.col_offset)
+                    if key not in seen:
+                        seen.add(key)
+                        findings.append(ctx.finding(
+                            node, NAME, f"read of {n} may observe the store "
+                            f"at line {rline} (read-after-write on "
+                            "overlapping slices with no intervening "
+                            "barrier)"))
+                    break
+        for n, span, node in stores:
+            w = widths.get(n)
+            for kind, rn, rspan, rline in state:
+                if kind == "L" and rn == n and _definitely_partial(
+                        span, rspan, w):
+                    key = ("war", n, node.lineno, node.col_offset)
+                    if key not in seen:
+                        seen.add(key)
+                        findings.append(ctx.finding(
+                            node, NAME, f"store to {n} partially overlaps "
+                            f"the slice read at line {rline} (write-after-"
+                            "read on a strict sub-slice leaves mixed-"
+                            "staleness lanes)"))
+                    break
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def _kernel_findings(ctx: Context, fn: ast.FunctionDef,
+                     refs: Dict[str, _RefInfo],
+                     env: Dict[str, object]) -> List[Finding]:
+    findings: List[Finding] = []
+    widths = {r: info.width for r, info in refs.items()}
+
+    # Taint: vars assigned from a full-ref load inherit the ref's width, so
+    # later column subscripts on them are schema-checked too.  Peel width-
+    # preserving .astype(...) wrappers (`t = tasks_ref[...].astype(f32)`).
+    def _peel(expr: ast.expr) -> ast.expr:
+        while isinstance(expr, ast.Call) \
+                and isinstance(expr.func, ast.Attribute) \
+                and expr.func.attr == "astype":
+            expr = expr.func.value
+        return expr
+
+    tainted: Dict[str, Optional[int]] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            value = _peel(node.value)
+            if isinstance(value, ast.Subscript) \
+                    and isinstance(value.value, ast.Name) \
+                    and value.value.id in refs:
+                span = _access_span(value, env, widths.get(value.value.id))
+                if span == FULL:
+                    tainted[node.targets[0].id] = widths.get(value.value.id)
+
+    # Store-to-input + per-access schema checks (flow-insensitive).
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Subscript) \
+                or not isinstance(node.value, ast.Name):
+            continue
+        name = node.value.id
+        if name in refs:
+            if isinstance(node.ctx, ast.Store) and refs[name].role == "in":
+                findings.append(ctx.finding(
+                    node, NAME, f"store to input ref {name}: the "
+                    "pallas_call in_specs declare it read-only; writing it "
+                    "aliases the caller's task matrix"))
+            findings += _check_span(
+                ctx, node, _access_span(node, env, widths.get(name)),
+                widths.get(name), env, f"ref {name}")
+        elif name in tainted:
+            findings += _check_span(
+                ctx, node, _access_span(node, env, tainted[name]),
+                tainted[name], env, f"matrix {name} (loaded from a ref)")
+
+    # Hazard dataflow per region: the top-level body, then each nested
+    # function (predicated @pl.when regions execute independently).
+    findings += _region_findings(ctx, fn.body, refs, env)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.FunctionDef) and node is not fn:
+            findings += _region_findings(ctx, node.body, refs, env)
+    return findings
+
+
+def check(ctx: Context) -> List[Finding]:
+    mod = ctx.module or ""
+    if not mod.startswith("repro.kernels"):
+        return []
+    env = layout_env()
+    specs = _kernel_specs(ctx.tree)
+    findings: List[Finding] = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        if not any(a.arg.endswith("_ref") for a in fn.args.args):
+            continue
+        refs = _classify_refs(fn, specs)
+        if refs:
+            findings += _kernel_findings(ctx, fn, refs, env)
+    return findings

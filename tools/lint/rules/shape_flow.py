@@ -1,0 +1,300 @@
+"""shape-flow: symbolic matrix shape/dtype inference at solver boundaries.
+
+The solver stack passes task/key/solution matrices between nine modules as
+bare float32 ndarrays; nothing but convention says a ``solve_rows`` call is
+fed ``[n, KEY_COLS]`` and a kernel path ``[n, NCOL]``.  The golden tests
+catch drift only after the fact.  This family runs a forward symbolic
+inference over every function in the solver-facing modules (the same scope
+as ``matrix-schema``), tracking per-variable ``(width, dtype)`` facts:
+
+* widths are *produced* by the known constructors — ``build_keys`` is
+  ``(KEY_COLS, f32)`` by its own contract, ``solution_to_rows`` is
+  ``SOL_COLS``, ``np.zeros/empty/ones/full((n, W))`` resolve ``W`` through
+  ``layout.py``, ``np.stack([..k items..], axis=1)`` is ``k``,
+  ``np.concatenate(.., axis=1)`` sums known widths, ``np.broadcast_to``
+  reads its target shape, row slices and ``_pad_rows`` preserve width,
+  column slices re-resolve through the layout constants;
+* and *consumed* at the contract sites — the key matrix of
+  ``solver_cache.solve_rows(_async)`` must be ``[n, KEY_COLS]`` float32,
+  and the kernel entries ``dvfs_solve_matrix`` (``KEY_COLS`` or ``NCOL``)
+  and ``dvfs_solve_kernel`` (``NCOL`` or ``LEGACY_NCOL``) must be fed a
+  task matrix of a declared width.
+
+Unknown widths stay silent — the rule flags only *provable* mismatches, so
+parameter passthroughs (already guarded by runtime asserts) never false-
+positive.  ``single_task.solve_rows_async`` takes per-task params, not a
+key matrix, and is excluded by its qualifier.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from tools.lint import Context, Finding
+from tools.lint.flow import (
+    CFG, _resolve_int, attr_chain, build_cfg, layout_env, resolve_col_expr,
+    run_forward, statement_states, stmt_exprs, walk_calls,
+)
+from tools.lint.rules.matrix_schema import SCHEMA_SCOPE
+
+NAME = "shape-flow"
+
+#: (width, dtype) with None = unknown; dtype in {"f32", "f64"}.
+_Fact = Tuple[Optional[int], Optional[str]]
+_Env = Tuple[Tuple[str, _Fact], ...]  # sorted, hashable var environment
+
+_F32 = {"np.float32", "numpy.float32", "jnp.float32", "jax.numpy.float32"}
+_F64 = {"np.float64", "numpy.float64", "jnp.float64", "jax.numpy.float64"}
+
+#: Width-preserving single-matrix wrappers.
+_PASSTHROUGH = {"ascontiguousarray", "asarray", "array", "copy",
+                "device_put", "_pad_rows", "pad_rows", "abs", "where"}
+
+
+def _final(chain: Optional[str]) -> str:
+    return (chain or "").rsplit(".", 1)[-1]
+
+
+def _dtype_of(node: ast.expr) -> Optional[str]:
+    chain = attr_chain(node)
+    if chain in _F32:
+        return "f32"
+    if chain in _F64:
+        return "f64"
+    return None
+
+
+def _env_get(env: _Env, var: str) -> _Fact:
+    for v, fact in env:
+        if v == var:
+            return fact
+    return (None, None)
+
+
+def _env_set(env: _Env, var: str, fact: _Fact) -> _Env:
+    items = [(v, f) for v, f in env if v != var]
+    if fact != (None, None):
+        items.append((var, fact))
+    return tuple(sorted(items))
+
+
+def _shape_width(node: ast.expr, layout: Dict[str, object]) -> \
+        Optional[int]:
+    """Second element of an explicit ``(rows, cols)`` shape tuple."""
+    if isinstance(node, ast.Tuple) and len(node.elts) == 2:
+        return _resolve_int(node.elts[1], layout)
+    return None
+
+
+def _infer(expr: ast.expr, env: _Env,
+           layout: Dict[str, object]) -> _Fact:
+    """Symbolic (width, dtype) of an expression, or (None, None)."""
+    if isinstance(expr, ast.Name):
+        return _env_get(env, expr.id)
+    if isinstance(expr, ast.IfExp):
+        a, b = _infer(expr.body, env, layout), _infer(
+            expr.orelse, env, layout)
+        return (a[0] if a[0] == b[0] else None,
+                a[1] if a[1] == b[1] else None)
+    if isinstance(expr, ast.Subscript):
+        base_w, base_d = _infer(expr.value, env, layout)
+        sl = expr.slice
+        if isinstance(sl, ast.Tuple) and len(sl.elts) == 2:
+            lead, last = sl.elts
+            if isinstance(lead, ast.Slice):  # [rows, cols] selection
+                span = resolve_col_expr(last, layout, base_w)
+                if span is not None:
+                    return (span[1] - span[0], base_d)
+                return (None, base_d)
+            return (None, None)
+        if isinstance(sl, ast.Slice):  # row slice keeps the width
+            return (base_w, base_d)
+        return (None, None)
+    if not isinstance(expr, ast.Call):
+        return (None, None)
+
+    call = expr
+    name = _final(attr_chain(call.func))
+    kw = {k.arg: k.value for k in call.keywords if k.arg}
+
+    if name == "build_keys":
+        key_cols = layout.get("KEY_COLS")
+        return (key_cols if isinstance(key_cols, int) else None, "f32")
+    if name == "solution_to_rows":
+        sol = layout.get("SOL_COLS")
+        return (sol if isinstance(sol, int) else None, "f32")
+    if name in _PASSTHROUGH:
+        if not call.args:
+            return (None, None)
+        w, d = _infer(call.args[0], env, layout)
+        if len(call.args) >= 2:
+            d = _dtype_of(call.args[1]) or d
+        if "dtype" in kw:
+            d = _dtype_of(kw["dtype"]) or d
+        return (w, d)
+    if name in {"zeros", "empty", "ones", "full", "zeros_like",
+                "empty_like", "full_like"}:
+        if name.endswith("_like"):
+            return _infer(call.args[0], env, layout) if call.args \
+                else (None, None)
+        w = _shape_width(call.args[0], layout) if call.args else None
+        d = None
+        for cand in list(call.args[1:]) + \
+                ([kw["dtype"]] if "dtype" in kw else []):
+            d = _dtype_of(cand) or d
+        return (w, d)
+    if name == "broadcast_to" and len(call.args) >= 2:
+        _, d = _infer(call.args[0], env, layout)
+        return (_shape_width(call.args[1], layout), d)
+    if name == "stack" and call.args \
+            and isinstance(call.args[0], (ast.List, ast.Tuple)):
+        axis = kw.get("axis")
+        if axis is not None and _resolve_int(axis, layout) == 1:
+            elts = call.args[0].elts
+            dtypes = {_infer(e, env, layout)[1] for e in elts}
+            d = dtypes.pop() if len(dtypes) == 1 else None
+            return (len(elts), d)
+        return (None, None)
+    if name == "concatenate" and call.args \
+            and isinstance(call.args[0], (ast.List, ast.Tuple)):
+        axis_node = kw.get("axis") or (
+            call.args[1] if len(call.args) > 1 else None)
+        axis = _resolve_int(axis_node, layout) if axis_node is not None \
+            else 0
+        facts = [_infer(e, env, layout) for e in call.args[0].elts]
+        dtypes = {d for _, d in facts}
+        d = dtypes.pop() if len(dtypes) == 1 else None
+        widths = [w for w, _ in facts]
+        if axis == 1:
+            if all(w is not None for w in widths):
+                return (sum(widths), d)  # type: ignore[arg-type]
+            return (None, d)
+        if axis == 0:
+            known = {w for w in widths if w is not None}
+            if len(known) == 1 and all(w is not None for w in widths):
+                return (known.pop(), d)
+            return (None, d)
+        return (None, d)
+    return (None, None)
+
+
+# ---------------------------------------------------------------------------
+# Contract sites
+# ---------------------------------------------------------------------------
+
+def _key_contract_site(call: ast.Call) -> bool:
+    """True for ``solve_rows``/``solve_rows_async`` calls that take a key
+    matrix — i.e. the solver_cache entry points, not the per-task wrapper
+    ``single_task.solve_rows_async(params, ...)``."""
+    chain = attr_chain(call.func) or ""
+    name = _final(chain)
+    if name not in {"solve_rows", "solve_rows_async"}:
+        return False
+    qualifier = chain[: -len(name)].rstrip(".")
+    return qualifier in {"", "solver_cache"} and bool(call.args)
+
+
+def _contract_findings(ctx: Context, fn: ast.FunctionDef,
+                       layout: Dict[str, object]) -> List[Finding]:
+    key_cols = layout.get("KEY_COLS")
+    ncol = layout.get("NCOL")
+    legacy = layout.get("LEGACY_NCOL")
+    if not isinstance(key_cols, int) or not isinstance(ncol, int):
+        return []
+
+    def transfer(env: _Env, stmt: ast.stmt) -> _Env:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            return _env_set(env, stmt.targets[0].id,
+                            _infer(stmt.value, env, layout))
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.For)):
+            # Any other assignment form degrades its targets to unknown.
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            for t in targets:
+                for node in ast.walk(t):
+                    if isinstance(node, ast.Name) \
+                            and isinstance(node.ctx, ast.Store):
+                        env = _env_set(env, node.id, (None, None))
+        return env
+
+    def join(envs: List[_Env]) -> _Env:
+        if not envs:
+            return tuple()
+        merged: Dict[str, _Fact] = {}
+        all_vars = {v for e in envs for v, _ in e}
+        for v in all_vars:
+            facts = [_env_get(e, v) for e in envs]
+            w = facts[0][0] if all(f[0] == facts[0][0] for f in facts) \
+                else None
+            d = facts[0][1] if all(f[1] == facts[0][1] for f in facts) \
+                else None
+            merged[v] = (w, d)
+        return tuple(sorted(
+            (v, f) for v, f in merged.items() if f != (None, None)))
+
+    cfg: CFG = build_cfg(fn)
+    entry = run_forward(cfg, tuple(), transfer, join)
+    findings: List[Finding] = []
+    seen: set = set()
+    for env, stmt in statement_states(cfg, entry, transfer):
+        for expr in stmt_exprs(stmt):
+            for call in walk_calls(expr):
+                name = _final(attr_chain(call.func))
+                if _key_contract_site(call):
+                    w, d = _infer(call.args[0], env, layout)
+                    key = (call.lineno, call.col_offset)
+                    if w is not None and w != key_cols \
+                            and key not in seen:
+                        seen.add(key)
+                        findings.append(ctx.finding(
+                            call, NAME, f"{name}() is fed a [n, {w}] "
+                            f"matrix; the key-matrix contract is "
+                            f"[n, {key_cols}] (layout.KEY_COLS)"))
+                    elif d == "f64" and key not in seen:
+                        seen.add(key)
+                        findings.append(ctx.finding(
+                            call, NAME, f"{name}() key matrix must be "
+                            "float32 (cache keys hash raw f32 bytes); "
+                            "inferred float64"))
+                elif name == "dvfs_solve_matrix" and call.args:
+                    w, _d = _infer(call.args[0], env, layout)
+                    ok = {key_cols, ncol}
+                    if w is not None and w not in ok:
+                        key = (call.lineno, call.col_offset)
+                        if key not in seen:
+                            seen.add(key)
+                            findings.append(ctx.finding(
+                                call, NAME, f"dvfs_solve_matrix() is fed a "
+                                f"[n, {w}] matrix; it accepts "
+                                f"[n, {key_cols}] keys or [n, {ncol}] "
+                                "task rows"))
+                elif name == "dvfs_solve_kernel" and call.args:
+                    w, _d = _infer(call.args[0], env, layout)
+                    ok = {ncol} | ({legacy} if isinstance(legacy, int)
+                                   else set())
+                    if w is not None and w not in ok:
+                        key = (call.lineno, call.col_offset)
+                        if key not in seen:
+                            seen.add(key)
+                            findings.append(ctx.finding(
+                                call, NAME, f"dvfs_solve_kernel() is fed a "
+                                f"[n, {w}] matrix; it accepts "
+                                f"[n, {ncol}] (or legacy [n, {legacy}]) "
+                                "task rows"))
+    return findings
+
+
+def check(ctx: Context) -> List[Finding]:
+    mod = ctx.module or ""
+    if mod not in SCHEMA_SCOPE:
+        return []
+    layout = layout_env()
+    if not layout:
+        return []
+    findings: List[Finding] = []
+    for fn in ast.walk(ctx.tree):
+        if isinstance(fn, ast.FunctionDef):
+            findings += _contract_findings(ctx, fn, layout)
+    return findings

@@ -1,0 +1,228 @@
+"""Differential mutation corpus: prove the flow-sensitive rules catch bugs.
+
+A linter that never fires is indistinguishable from one that cannot fire.
+This module seeds ~a dozen realistic hazard/protocol/shape mutations into
+*copies* of the real kernel and scheduler sources (the files the rules
+exist to protect), lints each mutant in-memory, and asserts that exactly
+the expected rule family flags it — and that the pristine file is clean,
+so the mutation is provably what trips the rule.
+
+Run directly (``python -m tools.lint.selfcheck``; exit 0 = every mutant
+caught) or via the parametrized test in ``tests/test_lint.py``.  CI runs
+both.  When a rule is refactored, a mutant going silently uncaught fails
+the gate — the corpus is the rule suite's own regression harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+from tools.lint import Finding, lint_source, module_name_for
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+
+@dataclasses.dataclass(frozen=True)
+class Mutation:
+    """One seeded bug: replace ``old`` (must occur exactly once) with
+    ``new`` in ``path``; the lint must report ``rule`` with a message
+    containing ``expect`` (a stable substring identifying the check)."""
+
+    name: str
+    path: str           # repo-relative source file to mutate
+    old: str
+    new: str
+    rule: str
+    expect: str
+
+
+MUTATIONS: Tuple[Mutation, ...] = (
+    # ---- pallas-hazard ---------------------------------------------------
+    Mutation(
+        name="ssd-load-after-store",
+        path="src/repro/kernels/ssd_scan.py",
+        old=("    cs = jax.lax.dot_general(cm, state_ref[...], "
+             "(((1,), (1,)), ((), ())),"),
+        new=("    state_ref[...] = state_ref[...] * 2.0\n"
+             "    cs = jax.lax.dot_general(cm, state_ref[...], "
+             "(((1,), (1,)), ((), ())),"),
+        rule="pallas-hazard",
+        expect="read-after-write",
+    ),
+    Mutation(
+        name="dvfs-partial-store-after-load",
+        path="src/repro/kernels/dvfs_opt.py",
+        old="    out_ref[...] = out.astype(out_ref.dtype)",
+        new=("    tasks_ref[:, col(READJUST)] = t[:, col(READJUST)]\n"
+             "    out_ref[...] = out.astype(out_ref.dtype)"),
+        rule="pallas-hazard",
+        expect="write-after-read",
+    ),
+    Mutation(
+        name="dvfs-store-to-input-ref",
+        path="src/repro/kernels/dvfs_opt.py",
+        old="    out_ref[...] = out.astype(out_ref.dtype)",
+        new="    tasks_ref[...] = out.astype(out_ref.dtype)",
+        rule="pallas-hazard",
+        expect="store to input ref",
+    ),
+    Mutation(
+        name="dvfs-widen-column-slice",
+        path="src/repro/kernels/dvfs_opt.py",
+        old="    allowed = t[:, col(ALLOWED)]",
+        new="    allowed = t[:, ALLOWED:FM_MIN]",
+        rule="pallas-hazard",
+        expect="crosses a layout.py column-group boundary",
+    ),
+    Mutation(
+        name="dvfs-out-of-bounds-column",
+        path="src/repro/kernels/dvfs_opt.py",
+        old="                              t[:, col(FM_MAX)])",
+        new="                              t[:, col(NCOL)])",
+        rule="pallas-hazard",
+        expect="out of bounds",
+    ),
+    # ---- async-protocol --------------------------------------------------
+    Mutation(
+        name="cache-drop-result",
+        path="src/repro/core/solver_cache.py",
+        old=("    return solve_rows_async(keys, solver_fn, tag=tag, "
+             "cache=cache).result()"),
+        new=("    handle = solve_rows_async(keys, solver_fn, tag=tag, "
+             "cache=cache)\n"
+             "    return None"),
+        rule="async-protocol",
+        expect="never reaches result()",
+    ),
+    Mutation(
+        name="cache-double-consume",
+        path="src/repro/core/solver_cache.py",
+        old=("    return solve_rows_async(keys, solver_fn, tag=tag, "
+             "cache=cache).result()"),
+        new=("    handle = solve_rows_async(keys, solver_fn, tag=tag, "
+             "cache=cache)\n"
+             "    handle.result()\n"
+             "    return handle.result()"),
+        rule="async-protocol",
+        expect="already be consumed",
+    ),
+    Mutation(
+        name="online-blocking-in-window",
+        path="src/repro/core/online.py",
+        old="        readj.dispatch(pending)",
+        new=("        readj.dispatch(pending)\n"
+             "        _probe = np.asarray(pending)"),
+        rule="async-protocol",
+        expect="blocks on device results",
+    ),
+    Mutation(
+        name="online-view-read-before-sync",
+        path="src/repro/core/online.py",
+        old=("            state.consume_sync(handle, spans[j])\n"
+             "            if vector:\n"
+             "                ctx.update_tasks(spans[j])"),
+        new=("            if vector:\n"
+             "                ctx.update_tasks(spans[j])\n"
+             "            state.consume_sync(handle, spans[j])"),
+        rule="async-protocol",
+        expect="full-horizon view",
+    ),
+    # ---- shape-flow ------------------------------------------------------
+    Mutation(
+        name="machines-truncated-key-matrix",
+        path="src/repro/core/machines.py",
+        old=("    handle = solver_cache.solve_rows_async(\n"
+             "        keys, lambda km: kernel_ops.dvfs_solve_matrix(km, "
+             "block=False),"),
+        new=("    handle = solver_cache.solve_rows_async(\n"
+             "        keys[:, :layout.LEGACY_NCOL],\n"
+             "        lambda km: kernel_ops.dvfs_solve_matrix(km, "
+             "block=False),"),
+        rule="shape-flow",
+        expect="key-matrix contract",
+    ),
+    Mutation(
+        name="single-task-params-only-keys",
+        path="src/repro/core/single_task.py",
+        old=("    return solver_cache.solve_rows_async(keys, solve, "
+             "tag=tag, cache=cache,\n"
+             "                                         unique=False)"),
+        new=("    return solver_cache.solve_rows_async(\n"
+             "        keys[:, layout.PARAMS_SLICE], solve, tag=tag, "
+             "cache=cache, unique=False)"),
+        rule="shape-flow",
+        expect="key-matrix contract",
+    ),
+    # ---- unused-suppression ----------------------------------------------
+    Mutation(
+        name="cluster-stale-suppression",
+        path="src/repro/core/cluster.py",
+        old="# lint: disable=matrix-schema",
+        new="# lint: disable=dtype-discipline",
+        rule="unused-suppression",
+        expect="does not suppress any finding",
+    ),
+)
+
+
+def apply(mutation: Mutation, root: Path = REPO_ROOT) -> str:
+    """Mutated source text; raises if the anchor is missing/ambiguous."""
+    source = (root / mutation.path).read_text()
+    n = source.count(mutation.old)
+    if n != 1:
+        raise AssertionError(
+            f"{mutation.name}: anchor occurs {n} times in {mutation.path} "
+            "(expected exactly 1) — the corpus drifted from the source; "
+            "re-anchor it")
+    return source.replace(mutation.old, mutation.new, 1)
+
+
+def run_one(mutation: Mutation,
+            root: Path = REPO_ROOT) -> Tuple[bool, List[Finding]]:
+    """(caught, findings-of-the-expected-rule) for one mutant."""
+    path = mutation.path
+    mutated = apply(mutation, root)
+    findings = lint_source(mutated, path,
+                           module=module_name_for(Path(path)))
+    hits = [f for f in findings
+            if f.rule == mutation.rule and mutation.expect in f.message]
+    return bool(hits), findings
+
+
+def baseline_clean(mutation: Mutation, root: Path = REPO_ROOT) -> bool:
+    """The pristine file produces no finding matching the expectation, so
+    the mutation is what trips the rule."""
+    path = mutation.path
+    source = (root / path).read_text()
+    findings = lint_source(source, path,
+                           module=module_name_for(Path(path)))
+    return not any(f.rule == mutation.rule and mutation.expect in f.message
+                   for f in findings)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    failures = 0
+    for m in MUTATIONS:
+        if not baseline_clean(m):
+            print(f"FAIL {m.name}: pristine {m.path} already matches "
+                  f"[{m.rule}] {m.expect!r}")
+            failures += 1
+            continue
+        caught, findings = run_one(m)
+        if caught:
+            print(f"ok   {m.name}: caught by [{m.rule}]")
+        else:
+            print(f"FAIL {m.name}: mutation NOT caught; findings were:")
+            for f in findings:
+                print(f"     {f.render()}")
+            failures += 1
+    total = len(MUTATIONS)
+    print(f"{total - failures}/{total} mutations caught")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
